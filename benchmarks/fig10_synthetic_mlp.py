@@ -1,0 +1,56 @@
+"""Paper Fig. 10: end-to-end latency on synthetic s^3 L y MLP workloads
+across frameworks (HLS4ML / SSR / AIE4ML / μ-ORCA DMA / μ-ORCA cascade,
+plus SSR/AIE4ML re-run with μ-ORCA's mapping).
+
+Paper claims: μ-ORCA cascade averages 1.7x / 3.9x / 7.6x / 1.4x over the
+FEASIBLE HLS4ML / SSR / AIE4ML / μ-ORCA-DMA designs, and 1.91x / 1.95x over
+SSR / AIE4ML with μ-ORCA mapping; supports >12 layers of 32^3 or >4 of 64^3
+within the 1 μs budget.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import compare_frameworks
+from repro.core.layerspec import synthetic_mlp
+
+SIZES = (32, 64, 128)
+LAYERS = (2, 4, 8, 12)
+
+
+def main() -> dict:
+    keys = ("hls4ml", "ssr", "aie4ml", "uorca_dma", "ssr_uorca_map",
+            "aie4ml_uorca_map")
+    sums = {k: [] for k in keys}
+    print("workload,uorca_ns," + ",".join(f"{k}_ns" for k in keys))
+    for s in SIZES:
+        for ly in LAYERS:
+            model = synthetic_mlp(s, ly)
+            c = compare_frameworks(model)
+            sp = c.speedups()
+            row = [f"{s}^3L{ly}", f"{c.uorca_cascade_ns:.0f}"]
+            for k in keys:
+                v = getattr(c, k + "_ns")
+                row.append(f"{v:.0f}" if v else "infeasible")
+                if sp.get(k):
+                    sums[k].append(sp[k])
+            print(",".join(row))
+    res = {}
+    print()
+    for k in keys:
+        if sums[k]:
+            res[f"speedup_{k}"] = float(np.mean(sums[k]))
+            print(f"mean speedup vs {k}: {res[f'speedup_{k}']:.2f}x")
+    # 1 us budget support claims
+    for s, max_l in ((32, 12), (64, 4)):
+        from repro.core.dse import explore
+        r = explore(synthetic_mlp(s, max_l))
+        ok = r is not None and r.latency_ns <= 1000.0
+        res[f"budget_{s}_{max_l}"] = bool(ok)
+        print(f"{s}^3 L{max_l} within 1 us budget: {ok} "
+              f"({r.latency_ns:.0f} ns)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

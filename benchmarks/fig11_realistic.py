@@ -1,0 +1,46 @@
+"""Paper Fig. 11 + Table 3: realistic JSC MLP and DeepSets workloads.
+
+Paper claims: 1.83x / 3.75x / 18.33x / 2.09x mean reduction over HLS4ML /
+SSR / AIE4ML / μ-ORCA-DMA; 2.42x / 2.47x over SSR / AIE4ML with μ-ORCA
+mapping; 6 of 7 workloads within the 1 μs budget (Deepsets-64-d at 1.1 μs);
+0.93 μs for the 6-layer DeepSets.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import compare_frameworks
+from repro.core.layerspec import REALISTIC_WORKLOADS
+
+
+def main() -> dict:
+    keys = ("hls4ml", "ssr", "aie4ml", "uorca_dma", "ssr_uorca_map",
+            "aie4ml_uorca_map")
+    sums = {k: [] for k in keys}
+    within = 0
+    res = {}
+    print("workload,uorca_ns," + ",".join(f"{k}_ns" for k in keys))
+    for name, fn in REALISTIC_WORKLOADS.items():
+        c = compare_frameworks(fn())
+        sp = c.speedups()
+        row = [name, f"{c.uorca_cascade_ns:.0f}"]
+        for k in keys:
+            v = getattr(c, k + "_ns")
+            row.append(f"{v:.0f}" if v else "n/a")
+            if sp.get(k):
+                sums[k].append(sp[k])
+        print(",".join(row))
+        res[f"latency_{name}_ns"] = c.uorca_cascade_ns
+        within += int(c.uorca_cascade_ns <= 1000.0)
+    print()
+    for k in keys:
+        if sums[k]:
+            res[f"speedup_{k}"] = float(np.mean(sums[k]))
+            print(f"mean speedup vs {k}: {res[f'speedup_{k}']:.2f}x")
+    res["within_budget"] = within
+    print(f"workloads within 1 us budget: {within}/7 (paper: 6/7)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark orchestrator: one module per paper table/figure + the Tier-B
+TPU benches. ``python -m benchmarks.run [name ...]`` runs all (or selected)
+and prints a summary of the key derived quantities per benchmark.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (dse_quality, fig9_perfmodel_error, fig10_synthetic_mlp,
+               fig11_realistic, roofline_report, table2_single_aie,
+               table4_global_agg, tpu_cascade_fusion)
+
+BENCHES = {
+    "table2_single_aie": table2_single_aie.main,
+    "fig9_perfmodel_error": fig9_perfmodel_error.main,
+    "fig10_synthetic_mlp": fig10_synthetic_mlp.main,
+    "fig11_realistic": fig11_realistic.main,
+    "table4_global_agg": table4_global_agg.main,
+    "tpu_cascade_fusion": tpu_cascade_fusion.main,
+    "dse_quality": dse_quality.main,
+    "roofline_report": roofline_report.main,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    summary = []
+    for name in names:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        t0 = time.time()
+        res = BENCHES[name]() or {}
+        dt = time.time() - t0
+        summary.append((name, dt, res))
+    print(f"\n{'=' * 72}\n== summary\n{'=' * 72}")
+    print("benchmark,seconds,key=value ...")
+    for name, dt, res in summary:
+        kv = " ".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
+                      for k, v in list(res.items())[:6])
+        print(f"{name},{dt:.1f},{kv}")
+
+
+if __name__ == "__main__":
+    main()

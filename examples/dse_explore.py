@@ -1,0 +1,38 @@
+"""Explore the paper's communication-computation trade-off interactively.
+
+Reproduces the §3.2 phenomenon on real workloads: sweep the per-layer tile
+budget and watch the DSE trade parallelism (faster compute) against cascade
+legality (faster communication). Prints, per budget, the chosen mappings,
+which edges cascade, and the latency split.
+
+    PYTHONPATH=src python examples/dse_explore.py [workload]
+"""
+import sys
+
+from repro.core import dse
+from repro.core.layerspec import REALISTIC_WORKLOADS, synthetic_mlp
+
+name = sys.argv[1] if len(sys.argv) > 1 else "JSC-M"
+model = (REALISTIC_WORKLOADS[name]() if name in REALISTIC_WORKLOADS
+         else synthetic_mlp(int(name.split("^")[0]),
+                            int(name.split("L")[1])))
+
+print(f"workload: {model.name} ({model.num_layers} layers)\n")
+print("tile_budget,latency_ns,cascade_edges,comp_ns,comm_ns,maps")
+for budget in (8, 16, 32, 64, 128, 304):
+    r = dse.explore(model, max_tiles_per_layer=budget)
+    if r is None:
+        print(f"{budget},infeasible")
+        continue
+    lb = r.latency
+    comp = sum(lb.comp) * 0.8
+    comm = (sum(lb.comm) + lb.plio_in + lb.plio_out) * 0.8
+    maps = " ".join(f"{m.A}x{m.B}x{m.C}" for m in r.mapping.mappings)
+    print(f"{budget},{r.latency_ns:.0f},{r.cascade_edges}/"
+          f"{model.num_layers - 1},{comp:.0f},{comm:.0f},{maps}")
+
+print("\nforced-DMA ablation (μ-ORCA DMA):")
+r = dse.explore(model)
+rd = dse.explore(model, force_dma=True)
+print(f"cascade {r.latency_ns:.0f} ns vs DMA {rd.latency_ns:.0f} ns "
+      f"-> {rd.latency_ns / r.latency_ns:.2f}x from the cascade connection")

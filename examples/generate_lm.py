@@ -1,0 +1,78 @@
+"""LM serving path end-to-end: train a reduced assigned arch briefly on the
+bigram stream, then GENERATE with the single-token decode step + cache —
+the serve_step that the decode_32k/long_500k dry-run cells lower at scale.
+
+Verifies the decode path agrees with teacher-forced prefill on the same
+prefix, then free-runs and reports how often the model reproduces valid
+bigram successors (should far exceed chance after a short training run).
+
+    PYTHONPATH=src python examples/generate_lm.py [--arch recurrentgemma-2b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import ARCH_NAMES, get_reduced
+from repro.data import BigramSampler, LMDataConfig
+from repro.distributed.steps import make_train_step
+from repro.models import build
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES), default="qwen3-14b")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--gen-len", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    if cfg.enc_layers or cfg.frontend != "none":
+        raise SystemExit("pick an LM arch")
+    model = build(cfg)
+    data = BigramSampler(LMDataConfig(vocab=cfg.vocab, seq_len=64, seed=0))
+    step_fn = jax.jit(make_train_step(
+        cfg, optim.AdamWConfig(lr=3e-3, warmup_steps=10,
+                               total_steps=args.steps)))
+    params = model.init(jax.random.key(0))
+    opt = optim.init(params)
+    for step, (t, l) in enumerate(data.stream(16)):
+        if step >= args.steps:
+            break
+        params, opt, m = step_fn(params, opt,
+                                 {"tokens": jnp.asarray(t),
+                                  "labels": jnp.asarray(l)})
+    print(f"[gen] trained {cfg.name} {args.steps} steps, "
+          f"final loss {float(m['loss']):.3f}")
+
+    # --- decode == prefill consistency on a prefix -------------------------
+    prefix = jnp.asarray(data.batch(1, 999)[:, :9])       # (1, 9)
+    logits_pf, _ = model.forward(params, prefix)
+    cache = model.init_cache(batch=1, max_len=args.gen_len + 16)
+    decode = jax.jit(model.decode_step)
+    for t in range(prefix.shape[1]):
+        logits_dc, cache = decode(params, prefix[:, t:t + 1], cache)
+    drift = float(jnp.max(jnp.abs(logits_pf[:, -1] - logits_dc[:, 0])))
+    print(f"[gen] decode-vs-prefill last-token logit drift: {drift:.2e}")
+
+    # --- greedy generation --------------------------------------------------
+    tok = jnp.argmax(logits_dc[:, 0:1], axis=-1).astype(jnp.int32)
+    toks = [int(tok[0, 0])]
+    for _ in range(args.gen_len - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, 0:1], axis=-1).astype(jnp.int32)
+        toks.append(int(tok[0, 0]))
+    # how many generated transitions are valid bigram successors?
+    valid = sum(int(toks[i + 1] in data.succ[toks[i]])
+                for i in range(len(toks) - 1))
+    frac = valid / (len(toks) - 1)
+    chance = data.cfg.branching / data.cfg.vocab
+    print(f"[gen] generated {len(toks)} tokens; valid-successor rate "
+          f"{frac:.2f} (chance {chance:.3f})")
+    print(f"[gen] sample: {toks[:24]}")
+
+
+if __name__ == "__main__":
+    main()

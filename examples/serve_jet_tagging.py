@@ -1,0 +1,15 @@
+"""End-to-end driver (the paper's deployment): train a DeepSets jet tagger,
+quantize to the paper's INT8/pow2 scheme, serve a stream of batched requests
+through the fused cascade kernel, and compare against the paper's own
+hardware target via the Tier-A DSE.
+
+    PYTHONPATH=src python examples/serve_jet_tagging.py [--events 512]
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--model", "deepsets-32", "--events", "256",
+                "--train-steps", "200"] + sys.argv[1:]
+    serve.main()

@@ -1,0 +1,16 @@
+"""End-to-end LM training driver on the full production substrate:
+planner shardings, AdamW, async atomic checkpointing with auto-resume,
+watchdog. Uses a reduced config of an assigned arch sized for this host;
+on real hardware pass --full (and a bigger --batch/--seq).
+
+    PYTHONPATH=src python examples/train_lm.py          # ~2 min on CPU
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "xlstm-350m", "--steps", "120",
+                "--batch", "8", "--seq", "64", "--log-every", "20",
+                "--ckpt-dir", "/tmp/repro_ckpt"] + sys.argv[1:]
+    train.main()

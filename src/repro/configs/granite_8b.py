@@ -1,0 +1,19 @@
+"""Config module for ``--arch granite-8b``.
+
+Thin accessor over the registry in :mod:`repro.configs.archs` (single
+source of truth; see its docstring for provenance and structure notes).
+"""
+from repro.configs.archs import granite_8b as full
+from repro.configs.archs import get_reduced as _gr
+
+ARCH = "granite-8b"
+
+
+def config():
+    """The FULL assigned configuration (dry-run scale)."""
+    return full()
+
+
+def reduced():
+    """Small same-family config for CPU smoke tests."""
+    return _gr(ARCH)

@@ -1,0 +1,19 @@
+"""Config module for ``--arch whisper-base``.
+
+Thin accessor over the registry in :mod:`repro.configs.archs` (single
+source of truth; see its docstring for provenance and structure notes).
+"""
+from repro.configs.archs import whisper_base as full
+from repro.configs.archs import get_reduced as _gr
+
+ARCH = "whisper-base"
+
+
+def config():
+    """The FULL assigned configuration (dry-run scale)."""
+    return full()
+
+
+def reduced():
+    """Small same-family config for CPU smoke tests."""
+    return _gr(ARCH)

@@ -1,0 +1,15 @@
+"""μ-ORCA core: the paper's contribution.
+
+Tier A (paper-faithful): AIE-ML analytical performance model (Eqs. 1-6),
+mapping/placement, and the §5.2 design space exploration.
+
+Tier B (TPU-native): overhead-aware TPU cost model and VMEM fusion planner
+(see :mod:`repro.core.tpu_model` and :mod:`repro.core.fusion_planner`),
+backing the Pallas cascade kernels and the mesh-level sharding planner.
+"""
+from . import aie_arch, layerspec, mapping, placement, perfmodel, dse, baselines
+
+__all__ = [
+    "aie_arch", "layerspec", "mapping", "placement", "perfmodel", "dse",
+    "baselines",
+]

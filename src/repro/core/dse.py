@@ -1,0 +1,214 @@
+"""Design space exploration for mapping + placement (paper §5.2, Fig. 8).
+
+The paper brute-forces the per-layer spatial parallelism ``(A_i, B_i, C_i)``
+(powers of two) subject to
+
+  * total tiles:  Σ A_i·B_i·C_i  <=  T_m · T_n
+  * PLIO budget:  A_1·B_1 + A_n·C_n  <=  P
+
+then places layers bottom-left sequentially; cascade is used on an edge when
+the mappings are compatible (A = A', C = C' = 1) *and* the consumer landed
+directly east of the producer.
+
+A naive product over layers explodes (~10^2 mappings/layer ^ 13 layers), so we
+run the same search as an exact *Pareto dynamic program*: the end-to-end cost
+(§5.1: Σ L_comp + Σ L_comm) is Markovian in the previous layer's mapping —
+layer i's computation cost depends on its own mapping and on whether edge
+i→i+1 cascades, which depends only on (mapping_i, mapping_{i+1}). The only
+global couplings are the tile budget (handled by keeping, per DP state, the
+Pareto frontier over {tiles used, cost}) and placement adjacency (handled by
+re-scoring the top-K DP solutions with the real placement, which also fixes
+the Manhattan distances in the DMA term). This is exhaustive over the paper's
+space modulo the distance estimate, and the re-scoring step restores exactness
+for every design it returns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import aie_arch
+from .aie_arch import OverheadParams, OVERHEADS
+from .layerspec import ModelSpec
+from .mapping import Mapping, ModelMapping, cascade_compatible, enumerate_mappings
+from .placement import Placement, place
+from .perfmodel import (LatencyBreakdown, cascade_comm_cycles, dma_comm_cycles,
+                        end_to_end_cycles, layer_comp_cycles, plio_cycles)
+
+
+@dataclasses.dataclass
+class DSEResult:
+    model: ModelSpec
+    mapping: ModelMapping
+    placement: Placement
+    latency: LatencyBreakdown
+    candidates_scored: int
+    dp_states: int
+
+    @property
+    def latency_ns(self) -> float:
+        return self.latency.total_ns
+
+    @property
+    def cascade_edges(self) -> int:
+        return sum(self.placement.cascade_links())
+
+    def summary(self) -> str:
+        maps = ", ".join(f"{m.A}x{m.B}x{m.C}" for m in self.mapping.mappings)
+        return (f"{self.model.name}: {self.latency_ns:.1f} ns, "
+                f"{self.mapping.total_tiles} tiles, "
+                f"{self.cascade_edges}/{self.model.num_layers - 1} cascade edges, "
+                f"maps [{maps}]")
+
+
+def _edge_cost_estimate(prev: Mapping, nxt: Mapping, *, force_dma: bool,
+                        p: OverheadParams) -> Tuple[float, bool]:
+    """(cost, is_cascade) for an inter-layer edge, distance estimated.
+
+    The Manhattan-distance estimate assumes sequential bottom-left placement:
+    adjacent rectangles are ~(width_prev + width_next) apart at worst.
+    """
+    if not force_dma and cascade_compatible(prev, nxt):
+        return cascade_comm_cycles(p=p), True
+    d_est = prev.cols + nxt.cols + abs(prev.rows - nxt.rows)
+    data = prev.layer.out_bytes
+    n_streams = max(1, min(prev.A * prev.C, nxt.A * nxt.B))
+    return dma_comm_cycles(math.ceil(data / n_streams) * n_streams, d_est,
+                           n_streams=n_streams, p=p), False
+
+
+def _pareto_insert(frontier: List[Tuple[int, float, tuple]], tiles: int,
+                   cost: float, back: tuple, cap: int = 24) -> bool:
+    """Insert (tiles, cost) into a Pareto frontier (fewer tiles, lower cost)."""
+    for t, c, _ in frontier:
+        if t <= tiles and c <= cost:
+            return False
+    frontier[:] = [(t, c, b) for t, c, b in frontier
+                   if not (tiles <= t and cost <= c)]
+    frontier.append((tiles, cost, back))
+    if len(frontier) > cap:
+        frontier.sort(key=lambda x: x[1])
+        del frontier[cap:]
+    return True
+
+
+def explore(model: ModelSpec, *,
+            rows: int = aie_arch.ARRAY_ROWS,
+            cols: int = aie_arch.ARRAY_COLS,
+            plio: int = aie_arch.PLIO_PORTS,
+            dtype: str = "int8",
+            p: OverheadParams = OVERHEADS,
+            force_dma: bool = False,
+            max_tiles_per_layer: Optional[int] = None,
+            top_k: int = 48,
+            include_plio: bool = True) -> Optional[DSEResult]:
+    """Run the §5.2 DSE. ``force_dma=True`` gives the μ-ORCA-DMA ablation."""
+    total_tiles = rows * cols
+    per_layer_cap = max_tiles_per_layer or total_tiles
+    layer_maps: List[List[Mapping]] = []
+    for layer in model.layers:
+        ms = [m for m in enumerate_mappings(layer, per_layer_cap, dtype)
+              if m.rows <= rows and m.cols <= cols]
+        if not ms:
+            return None
+        layer_maps.append(ms)
+
+    # --- Pareto DP over (layer index, mapping) states ---------------------
+    # frontier[state] = list of (tiles_used, cost_so_far, backpointer)
+    # backpointer = (prev_state_idx, prev_frontier_entry) chain, materialized
+    # as an immutable tuple of mapping indices for simplicity.
+    n_layers = model.num_layers
+    dp: Dict[int, List[Tuple[int, float, tuple]]] = {}
+    first = model.layers[0]
+    for j, m in enumerate(layer_maps[0]):
+        tiles = m.tiles
+        if tiles > total_tiles:
+            continue
+        if m.A * m.B > plio - 1:   # leave >=1 port for the last layer's store
+            continue
+        cost = plio_cycles(first.in_bytes, m.A * m.B, p=p) if include_plio else 0.0
+        _pareto_insert(dp.setdefault(j, []), tiles, cost, (j,))
+    dp_states = len(dp)
+
+    for i in range(1, n_layers):
+        ndp: Dict[int, List[Tuple[int, float, tuple]]] = {}
+        for jprev, frontier in dp.items():
+            mprev = layer_maps[i - 1][jprev]
+            for jnxt, mnxt in enumerate(layer_maps[i]):
+                ecost, is_cas = _edge_cost_estimate(mprev, mnxt,
+                                                    force_dma=force_dma, p=p)
+                # layer i-1 computation cost is resolved now that we know
+                # whether its output leaves via cascade.
+                ccost = layer_comp_cycles(mprev, out_cascade=is_cas, p=p)
+                for tiles, cost, back in frontier:
+                    t2 = tiles + mnxt.tiles
+                    if t2 > total_tiles:
+                        continue
+                    _pareto_insert(ndp.setdefault(jnxt, []),
+                                   t2, cost + ccost + ecost, back + (jnxt,))
+        dp = ndp
+        dp_states += len(dp)
+        if not dp:
+            return None
+
+    # --- collect finals: add last layer comp + PLIO out + constraints ------
+    finals: List[Tuple[float, tuple]] = []
+    last = model.layers[-1]
+    for j, frontier in dp.items():
+        mlast = layer_maps[-1][j]
+        ccost = layer_comp_cycles(mlast, out_cascade=False, p=p)
+        ocost = (plio_cycles(last.out_bytes, mlast.A * mlast.C, p=p)
+                 if include_plio else 0.0)
+        for tiles, cost, back in frontier:
+            finals.append((cost + ccost + ocost, back))
+    finals.sort(key=lambda x: x[0])
+
+    # --- re-score top-K with real placement --------------------------------
+    best: Optional[DSEResult] = None
+    scored = 0
+    for est_cost, back in finals[:top_k]:
+        maps = tuple(layer_maps[i][j] for i, j in enumerate(back))
+        mm = ModelMapping(model=model, mappings=maps)
+        if not mm.fits(rows, cols, plio):
+            continue
+        pl = place(mm, rows, cols)
+        if pl is None:
+            continue
+        lat = end_to_end_cycles(pl, p=p, include_plio=include_plio)
+        if force_dma:
+            # ablation: cost every edge as DMA even if adjacency allows cascade
+            lat = _recost_all_dma(pl, p=p, include_plio=include_plio)
+        scored += 1
+        if best is None or lat.total < best.latency.total:
+            best = DSEResult(model=model, mapping=mm, placement=pl,
+                             latency=lat, candidates_scored=scored,
+                             dp_states=dp_states)
+    if best is not None:
+        best.candidates_scored = scored
+    return best
+
+
+def _recost_all_dma(placement: Placement, *, p: OverheadParams,
+                    include_plio: bool) -> LatencyBreakdown:
+    """Cost a placement with every inter-layer edge forced to direct DMA
+    (the μ-ORCA DMA ablation of §6.3)."""
+    maps = placement.model_mapping.mappings
+    dists = placement.dma_distances()
+    first, last_m = maps[0], maps[-1]
+    plio_in = (plio_cycles(first.layer.in_bytes, first.A * first.B, p=p)
+               if include_plio else 0.0)
+    plio_out = (plio_cycles(last_m.layer.out_bytes, last_m.A * last_m.C, p=p)
+                if include_plio else 0.0)
+    comp = [layer_comp_cycles(m, out_cascade=False, p=p) for m in maps]
+    comm, kinds = [], []
+    for i in range(len(maps) - 1):
+        nxt = maps[i + 1]
+        data = maps[i].layer.out_bytes
+        n_streams = max(1, min(maps[i].A * maps[i].C, nxt.A * nxt.B))
+        comm.append(dma_comm_cycles(math.ceil(data / n_streams) * n_streams,
+                                    dists[i], n_streams=n_streams, p=p))
+        kinds.append("dma")
+    return LatencyBreakdown(plio_in=plio_in, comp=comp, comm=comm,
+                            comm_kind=kinds, plio_out=plio_out)

@@ -1,0 +1,79 @@
+"""VMEM-constrained layer-fusion DSE (Tier B analogue of §5.2).
+
+Decides which contiguous layers of a model fuse into one Pallas kernel.
+The legality rule mirrors the paper's cascade constraint:
+
+  AIE:  cascade legal iff  A = A', C = C' = 1, consumer placed east
+  TPU:  fusion legal iff   chain working set fits the VMEM budget and the
+        producer's output layout equals the consumer's input layout
+        (both enforced by padding every feature dim to the 128-lane grid)
+
+and the objective is the overhead-aware end-to-end latency from
+:mod:`repro.core.tpu_model` — launches + DMA issues + max(compute, HBM).
+
+Optimal chain partitioning is an O(L^2) interval DP (the 1-D analogue of
+the paper's brute-force mapping search; exact, not heuristic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from . import tpu_model
+from .layerspec import ModelSpec
+from .tpu_model import LayerShape
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionPlan:
+    groups: Tuple[Tuple[int, ...], ...]     #: layer indices per fused kernel
+    time_s: float                           #: modeled end-to-end latency
+    unfused_time_s: float                   #: per-layer baseline
+    vmem_budget: int
+
+    @property
+    def speedup(self) -> float:
+        return self.unfused_time_s / self.time_s
+
+    @property
+    def n_kernels(self) -> int:
+        return len(self.groups)
+
+
+def shapes_from_model(model: ModelSpec,
+                      bytes_per_elem: int = 1) -> List[LayerShape]:
+    return [LayerShape(M=l.M, K=l.K, N=l.N, bytes_per_elem=bytes_per_elem)
+            for l in model.layers]
+
+
+def plan(layers: Sequence[LayerShape], *,
+         vmem_budget: int = tpu_model.VMEM_BUDGET) -> FusionPlan:
+    """Interval DP: best[i] = min over j<=i of best[j-1] + cost(j..i) with
+    cost defined only for chains whose working set fits VMEM."""
+    n = len(layers)
+    INF = float("inf")
+    best = [INF] * (n + 1)
+    cut = [0] * (n + 1)
+    best[0] = 0.0
+    for i in range(1, n + 1):
+        for j in range(i, 0, -1):
+            chain = layers[j - 1:i]
+            if tpu_model.chain_vmem_bytes(chain) > vmem_budget:
+                break       # longer chains only grow; j decreasing adds layers
+            t = best[j - 1] + tpu_model.fused_chain_time_s(chain)
+            if t < best[i]:
+                best[i] = t
+                cut[i] = j - 1
+    if best[n] == INF:
+        raise ValueError("a single layer exceeds the VMEM budget; "
+                         "shard the layer before fusing (planner/TP)")
+    groups: List[Tuple[int, ...]] = []
+    i = n
+    while i > 0:
+        j = cut[i]
+        groups.append(tuple(range(j, i)))
+        i = j
+    groups.reverse()
+    return FusionPlan(groups=tuple(groups), time_s=best[n],
+                      unfused_time_s=tpu_model.unfused_chain_time_s(layers),
+                      vmem_budget=vmem_budget)

@@ -1,0 +1,374 @@
+"""μ-ORCA overhead-aware performance model (paper §5.1, Eqs. 1-6).
+
+Two modes:
+
+* **ideal** — all overhead constants zeroed; pure bandwidth/MAC arithmetic.
+  Reproduces the paper's §3.1 motivating example exactly (288 vs 48 cycles).
+* **calibrated** — the paper's Eq. (1)-(6) with overhead constants fitted to
+  the paper's measured Table 2 / Table 4 numbers (:func:`calibrate`).
+
+Ground-truth measurement tables from the paper are embedded here; they are
+the calibration + validation data and the reference for the Fig. 9 model-error
+reproduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import aie_arch
+from .aie_arch import OverheadParams, OVERHEADS
+from .layerspec import LayerSpec, ModelSpec
+from .mapping import Mapping, ModelMapping, cascade_compatible
+from .placement import Placement, Rect, east_adjacent, max_manhattan
+
+# ---------------------------------------------------------------------------
+# Paper measurements (ground truth)
+# ---------------------------------------------------------------------------
+
+#: Table 2 — single-AIE computation time in ns (DMA load/store omitted).
+#: shape -> (GAMA, AIE4ML(+BR), uORCA, uORCA(+BR))
+TABLE2_NS: Dict[Tuple[int, int, int], Tuple[float, float, float, float]] = {
+    (16, 16, 16): (32.0, 34.4, 31.2, 34.4),
+    (32, 32, 32): (184.0, 194.4, 129.6, 184.0),
+    (64, 64, 64): (897.6, 1109.6, 868.0, 967.2),
+    (8, 32, 32): (63.2, 82.4, 45.6, 56.0),
+    (8, 64, 64): (124.8, 167.2, 123.2, 136.0),
+    (8, 128, 128): (438.4, 525.6, 438.4, 525.6),
+}
+
+#: Table 4 — global aggregation latency in ns: (M, F, #AIE) -> (baseline, ours)
+TABLE4_NS: Dict[Tuple[int, int, int], Tuple[float, float]] = {
+    (32, 32, 4): (373.0, 66.0),
+    (32, 64, 4): (760.0, 72.0),
+    (64, 32, 8): (397.0, 139.0),
+    (64, 64, 8): (834.0, 145.0),
+}
+
+
+def _blk(dtype: str) -> Tuple[int, int, int]:
+    return aie_arch.BLOCK_SHAPES[dtype]
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1)-(2): single-AIE kernel latency
+# ---------------------------------------------------------------------------
+
+def j_loops(H1: int, W2: int, dtype: str = "int8") -> int:
+    bm, _, bn = _blk(dtype)
+    return max(1, (H1 * W2) // (4 * bm * bn))
+
+
+def l_j_cycles(W1: int, *, cascaded: bool = False,
+               p: OverheadParams = OVERHEADS, dtype: str = "int8",
+               ideal: bool = False) -> float:
+    """Eq. (2)/(3): latency of one j loop."""
+    _, bk, _ = _blk(dtype)
+    base = 4.0 * W1 / bk
+    if ideal:
+        return base
+    lj = base + p.l_epi
+    if cascaded:
+        lj += p.l_cas
+    return lj
+
+
+def br_overhead(H1: int, W2: int, p: OverheadParams = OVERHEADS) -> float:
+    """Fixed bias+ReLU+requant epilogue cost (calibrated to Table 2 +BR)."""
+    return max(0.0, p.br_w2 * W2 + p.br_h1 * H1 + p.br_fixed)
+
+
+def single_aie_cycles(H1: int, W1: int, W2: int, *, bias_relu: bool = False,
+                      store_local: bool = True, p: OverheadParams = OVERHEADS,
+                      dtype: str = "int8", ideal: bool = False) -> float:
+    """Eq. (1): L_AIE = (H1*W2 / (4*B_M*B_N)) * L_j + L_o.
+
+    ``store_local=False`` models the cascade-output case where the store
+    instructions are never issued (paper §5.1.1: "when using cascade
+    communication, the results will not store to the local memory").
+    """
+    njl = j_loops(H1, W2, dtype)
+    lj = l_j_cycles(W1, p=p, dtype=dtype, ideal=ideal)
+    if ideal:
+        return njl * lj
+    lo = p.l_o
+    if store_local:
+        lo += p.l_o_store_dma * (H1 * W2)   # INT8: one byte per output element
+    if bias_relu:
+        lo += br_overhead(H1, W2, p)
+    return njl * lj + lo
+
+
+# ---------------------------------------------------------------------------
+# Eq. (3)-(4): AIE-array (one layer) computation latency
+# ---------------------------------------------------------------------------
+
+def layer_comp_cycles(m: Mapping, *, out_cascade: bool,
+                      p: OverheadParams = OVERHEADS,
+                      ideal: bool = False) -> float:
+    """Eq. (4): L_comp = (njl + B - 1) * max_a(L_j^a) + L_o.
+
+    The rightmost (a = B-1) AIE additionally runs the bias/ReLU epilogue
+    (paper §4.3.2), so it owns the max when bias_relu is set.
+    """
+    l = m.layer
+    if l.kind == "agg":
+        return agg_ours_cycles(m.A, m.H1, m.W2, p=p, ideal=ideal)
+    njl = m.j_loops
+    cascaded = m.B > 1
+    lj_max = l_j_cycles(m.W1, cascaded=cascaded, p=p, dtype=m.dtype,
+                        ideal=ideal)
+    if ideal:
+        return (njl + m.B - 1) * lj_max
+    lo = p.l_o
+    if not out_cascade:
+        lo += p.l_o_store_dma * (m.H1 * m.W2)
+    if l.bias or l.relu:
+        # Only the rightmost column runs the fused bias/ReLU epilogue
+        # (paper §4.3.2); it is the critical-path AIE.
+        lo += br_overhead(m.H1, m.W2, p)
+    return (njl + m.B - 1) * lj_max + lo
+
+
+# ---------------------------------------------------------------------------
+# Eq. (5)-(6): inter-layer communication latency
+# ---------------------------------------------------------------------------
+
+def dma_comm_cycles(data_bytes: int, manhattan: int, *, n_streams: int = 1,
+                    p: OverheadParams = OVERHEADS, ideal: bool = False) -> float:
+    """Eq. (5): L_comm^DMA = L_init + bits/32 + 4*D.
+
+    ``n_streams`` DMA channels move disjoint pieces concurrently (one per
+    destination buffer); the longest stream bounds latency, as does the
+    longest Manhattan distance (paper §5.1.3).
+    """
+    xfer = math.ceil(data_bytes * 8 / (aie_arch.DMA_BITS_PER_CYCLE * n_streams))
+    if ideal:
+        return xfer
+    return p.l_init + xfer + p.dma_hop * manhattan
+
+
+def cascade_comm_cycles(p: OverheadParams = OVERHEADS,
+                        ideal: bool = False) -> float:
+    """Eq. (6): constant gap O_cas — everything else overlaps (paper §4.2.3)."""
+    return 0.0 if ideal else p.o_cas
+
+
+def sharedmem_comm_cycles(data_bytes: int, *, p: OverheadParams = OVERHEADS,
+                          ideal: bool = False) -> float:
+    """Shared-local-memory connection: 256 b/cyc + lock sync (Fig. 1b)."""
+    xfer = math.ceil(data_bytes * 8 / aie_arch.SHAREDMEM_BITS_PER_CYCLE)
+    return xfer if ideal else p.l_init * 0.5 + xfer
+
+
+def plio_cycles(data_bytes: int, ports: int, *, p: OverheadParams = OVERHEADS,
+                ideal: bool = False) -> float:
+    """PL <-> AIE streaming for first-layer load / last-layer store."""
+    ports = max(1, ports)
+    xfer = math.ceil(data_bytes * 8 / (p.plio_bits_per_cycle * ports))
+    return xfer if ideal else p.plio_init + xfer
+
+
+# ---------------------------------------------------------------------------
+# Global aggregation layers (paper §4.3.1, Table 4)
+# ---------------------------------------------------------------------------
+
+def agg_ours_cycles(A: int, H1: int, W2: int, *, p: OverheadParams = OVERHEADS,
+                    ideal: bool = False, dtype: str = "int8") -> float:
+    """μ-ORCA MAC-based aggregation: reduce H1 x W2 per AIE with VMACs.
+
+    One VMAC reduces a (B_K x B_N) slab (ones-row LHS trick); latency is
+    dominated by fixed kernel overhead plus per-AIE chain handoff
+    (Table 4: latency grows with #AIE, mildly with the per-AIE matrix).
+    """
+    bm, bk, bn = _blk(dtype)
+    vmacs = math.ceil(H1 / bk) * math.ceil(W2 / bn)
+    if ideal:
+        return float(vmacs)
+    return p.agg_fixed + p.agg_per_aie * A + vmacs
+
+
+def agg_baseline_cycles(A: int, H1: int, W2: int, *,
+                        p: OverheadParams = OVERHEADS) -> float:
+    """In-house baseline (paper §6.5): extract()/aie::add/insert() per row —
+    vector moves on the critical path, cost ~ per-element."""
+    return p.agg_base_fixed + p.agg_base_per_aie * A + p.agg_base_per_elem * (H1 * W2)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end model latency (§5.1: total = sum of L_comp and L_comm)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LatencyBreakdown:
+    plio_in: float
+    comp: List[float]
+    comm: List[float]            # one entry per inter-layer edge
+    comm_kind: List[str]         # 'cascade' | 'dma' | 'sharedmem'
+    plio_out: float
+
+    @property
+    def total(self) -> float:
+        return self.plio_in + sum(self.comp) + sum(self.comm) + self.plio_out
+
+    @property
+    def total_ns(self) -> float:
+        return aie_arch.ns(self.total)
+
+
+def end_to_end_cycles(placement: Placement, *, p: OverheadParams = OVERHEADS,
+                      ideal: bool = False,
+                      include_plio: bool = True) -> LatencyBreakdown:
+    """Paper §5.1: model latency = Σ L_comp + Σ L_comm (+ PLIO in/out).
+
+    Edge communication kind is decided by the placement's cascade links;
+    aggregation layers consume via shared local memory (§4.3.1).
+    """
+    mm = placement.model_mapping
+    maps = mm.mappings
+    links = placement.cascade_links()
+    dists = placement.dma_distances()
+
+    first, last = maps[0], maps[-1]
+    plio_in = (plio_cycles(first.layer.in_bytes, first.A * first.B, p=p,
+                           ideal=ideal) if include_plio else 0.0)
+    plio_out = (plio_cycles(last.layer.out_bytes, last.A * last.C, p=p,
+                            ideal=ideal) if include_plio else 0.0)
+
+    comp: List[float] = []
+    comm: List[float] = []
+    kinds: List[str] = []
+    for i, m in enumerate(maps):
+        out_cas = i < len(links) and links[i]
+        comp.append(layer_comp_cycles(m, out_cascade=out_cas, p=p, ideal=ideal))
+    for i in range(len(maps) - 1):
+        nxt = maps[i + 1]
+        if links[i]:
+            if nxt.layer.kind == "agg":
+                # shared-memory handoff is folded into agg_ours_cycles'
+                # per-AIE term; edge adds only the lock-free gap.
+                comm.append(cascade_comm_cycles(p=p, ideal=ideal))
+                kinds.append("sharedmem")
+            else:
+                comm.append(cascade_comm_cycles(p=p, ideal=ideal))
+                kinds.append("cascade")
+        else:
+            # Direct DMA between layers: the consumer needs the producer's
+            # output partition it reads; duplicated pieces multicast free.
+            data = maps[i].layer.out_bytes
+            n_streams = max(1, min(maps[i].A * maps[i].C, nxt.A * nxt.B))
+            comm.append(dma_comm_cycles(
+                math.ceil(data / n_streams) * n_streams, dists[i],
+                n_streams=n_streams, p=p, ideal=ideal))
+            kinds.append("dma")
+    return LatencyBreakdown(plio_in=plio_in, comp=comp, comm=comm,
+                            comm_kind=kinds, plio_out=plio_out)
+
+
+# ---------------------------------------------------------------------------
+# Calibration: fit OverheadParams to the paper's measured tables
+# ---------------------------------------------------------------------------
+
+def calibrate() -> Tuple[OverheadParams, Dict[str, float]]:
+    """Least-squares fit of the overhead constants to Table 2 / Table 4.
+
+    Returns the fitted params and a dict of mean-absolute-percentage errors.
+    The fitted values are frozen into :data:`repro.core.aie_arch.OVERHEADS`;
+    ``tests/test_perfmodel.py`` asserts the frozen values still match.
+    """
+    bm, bk, bn = _blk("int8")
+
+    # --- no-BR rows: cycles = njl*(4*W1/bk) + njl*l_epi + l_o + s*out_bytes
+    rows, ys = [], []
+    for (m, k, n), (_, _, uorca, _) in TABLE2_NS.items():
+        njl = j_loops(m, n)
+        ideal = njl * 4.0 * k / bk
+        meas = aie_arch.cycles_from_ns(uorca)
+        rows.append([njl, 1.0, float(m * n)])
+        ys.append(meas - ideal)
+    A = np.array(rows)
+    y = np.array(ys)
+    (l_epi, l_o, s), *_ = np.linalg.lstsq(A, y, rcond=None)
+
+    # --- +BR deltas: extra = br_w2*W2 + br_h1*H1 + br_fixed
+    rows, ys = [], []
+    for (m, k, n), (_, _, uorca, uorca_br) in TABLE2_NS.items():
+        delta = aie_arch.cycles_from_ns(uorca_br - uorca)
+        rows.append([float(n), float(m), 1.0])
+        ys.append(delta)
+    (br_w2, br_h1, br_f), *_ = np.linalg.lstsq(np.array(rows), np.array(ys),
+                                               rcond=None)
+
+    # --- Table 4 ours: agg_fixed + agg_per_aie*A + vmacs (H1 = per-AIE rows)
+    rows, ys = [], []
+    for (m, f, a), (_, ours) in TABLE4_NS.items():
+        h1 = max(2 * bm, m // a)
+        vmacs = math.ceil(h1 / bk) * math.ceil(f / bn)
+        rows.append([1.0, float(a)])
+        ys.append(aie_arch.cycles_from_ns(ours) - vmacs)
+    (agg_fixed, agg_per_aie), *_ = np.linalg.lstsq(np.array(rows), np.array(ys),
+                                                   rcond=None)
+
+    # --- Table 4 baseline: fixed + per_aie*A + per_elem*(H1*W2)
+    rows, ys = [], []
+    for (m, f, a), (base, _) in TABLE4_NS.items():
+        h1 = max(2 * bm, m // a)
+        rows.append([1.0, float(a), float(h1 * f)])
+        ys.append(aie_arch.cycles_from_ns(base))
+    (ab_fixed, ab_aie, ab_elem), *_ = np.linalg.lstsq(np.array(rows),
+                                                      np.array(ys), rcond=None)
+
+    fitted = dataclasses.replace(
+        OVERHEADS,
+        l_epi=float(l_epi), l_o=float(l_o), l_o_store_dma=float(s),
+        br_w2=float(br_w2), br_h1=float(br_h1), br_fixed=float(br_f),
+        agg_fixed=float(agg_fixed), agg_per_aie=float(agg_per_aie),
+        agg_base_fixed=float(ab_fixed), agg_base_per_aie=float(ab_aie),
+        agg_base_per_elem=float(ab_elem),
+    )
+    errs = model_errors(fitted)
+    return fitted, errs
+
+
+def model_errors(p: OverheadParams = OVERHEADS) -> Dict[str, float]:
+    """Mean-absolute-percentage error of the model vs Table 2 / Table 4."""
+    errs_nobr, errs_br, errs_agg = [], [], []
+    for (m, k, n), (_, _, uorca, uorca_br) in TABLE2_NS.items():
+        est = aie_arch.ns(single_aie_cycles(m, k, n, p=p))
+        errs_nobr.append(abs(est - uorca) / uorca)
+        est_br = aie_arch.ns(single_aie_cycles(m, k, n, bias_relu=True, p=p))
+        errs_br.append(abs(est_br - uorca_br) / uorca_br)
+    for (m, f, a), (base, ours) in TABLE4_NS.items():
+        h1 = max(8, m // a)
+        est = aie_arch.ns(agg_ours_cycles(a, h1, f, p=p))
+        errs_agg.append(abs(est - ours) / ours)
+    return {
+        "table2_nobr_mape": float(np.mean(errs_nobr)),
+        "table2_br_mape": float(np.mean(errs_br)),
+        "table2_all_mape": float(np.mean(errs_nobr + errs_br)),
+        "table4_ours_mape": float(np.mean(errs_agg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Baseline estimators for Fig. 9 (model-error comparison)
+# ---------------------------------------------------------------------------
+
+def gama_estimate_cycles(H1: int, W1: int, W2: int, dtype: str = "int8") -> float:
+    """GAMA-style theoretical cycle count: ideal MACs/256 (over-optimistic)."""
+    return H1 * W1 * W2 / aie_arch.MACS_PER_CYCLE_INT8
+
+
+def ssr_estimate_cycles(H1: int, W1: int, W2: int, dtype: str = "int8") -> float:
+    """SSR-style profile-based estimate.
+
+    SSR profiles large array workloads and back-derives per-kernel cost,
+    folding PLIO/array-level sync into the per-kernel constant — accurate in
+    situ, but over-pessimistic for small standalone kernels (paper Fig. 9:
+    72.3% error). We model it as ideal + large profiled fixed cost.
+    """
+    SSR_PROFILED_OVERHEAD = 100.0   # cycles, amortized array-level cost
+    return H1 * W1 * W2 / aie_arch.MACS_PER_CYCLE_INT8 + SSR_PROFILED_OVERHEAD

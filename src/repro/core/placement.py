@@ -1,0 +1,151 @@
+"""Placement of mapped layers onto the physical AIE grid (paper §5.2).
+
+Each layer occupies a rectangle of ``(A*C) rows x B cols``. Layers are placed
+sequentially (left-to-right, bottom-to-top): for each layer we scan candidate
+bottom-left anchors in (row, col) order and take the first free rectangle —
+"the bottom-left tile with the minimum row index, and among such candidates,
+the minimum column index".
+
+The placement determines
+  * whether consecutive layers are *adjacent east* (cascade-eligible), and
+  * the Manhattan distance D used in the DMA latency model (Eq. 5 uses the
+    longest distance among communicating pairs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from . import aie_arch
+from .mapping import Mapping, ModelMapping, cascade_compatible
+
+
+@dataclasses.dataclass(frozen=True)
+class Rect:
+    """Placed rectangle: rows [r0, r0+h), cols [c0, c0+w)."""
+
+    r0: int
+    c0: int
+    h: int
+    w: int
+
+    @property
+    def r1(self) -> int:
+        return self.r0 + self.h
+
+    @property
+    def c1(self) -> int:
+        return self.c0 + self.w
+
+    def overlaps(self, other: "Rect") -> bool:
+        return not (self.r1 <= other.r0 or other.r1 <= self.r0
+                    or self.c1 <= other.c0 or other.c1 <= self.c0)
+
+    def tiles(self) -> List[Tuple[int, int]]:
+        return [(r, c) for r in range(self.r0, self.r1)
+                for c in range(self.c0, self.c1)]
+
+
+def east_adjacent(prev: Rect, nxt: Rect, *, exact_rows: bool = True) -> bool:
+    """True when ``nxt`` starts in the column immediately east of ``prev``.
+
+    ``exact_rows`` demands the same row span (Fig. 6 MM-to-MM cascade);
+    aggregation edges only need overlapping rows (§4.3.1 places the agg
+    column adjacent to the producer; the 1 x F result streams onward from
+    a single tile).
+    """
+    if nxt.c0 != prev.c1:
+        return False
+    if exact_rows:
+        return nxt.r0 == prev.r0 and nxt.h == prev.h
+    return not (nxt.r1 <= prev.r0 or prev.r1 <= nxt.r0)
+
+
+def max_manhattan(prev: Rect, nxt: Rect) -> int:
+    """Longest Manhattan distance between any producer tile (rightmost column
+    of ``prev``, where full results live — Fig. 4d) and any consumer tile."""
+    d = 0
+    src_c = prev.c1 - 1
+    for sr in range(prev.r0, prev.r1):
+        for dr in range(nxt.r0, nxt.r1):
+            for dc in range(nxt.c0, nxt.c1):
+                d = max(d, abs(sr - dr) + abs(src_c - dc))
+    return d
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Physical placement for every layer of a ModelMapping."""
+
+    model_mapping: ModelMapping
+    rects: Tuple[Rect, ...]
+
+    def cascade_links(self) -> List[bool]:
+        """For each inter-layer edge i -> i+1: is the cascade connection used?
+
+        Requires mapping compatibility (A=A', C=C'=1) *and* east adjacency.
+        Aggregation layers use the shared-memory connection from their
+        producer (paper §4.3.1) which also requires adjacency.
+        """
+        mm = self.model_mapping.mappings
+        links = []
+        for i in range(len(mm) - 1):
+            agg_edge = (mm[i].layer.kind == "agg"
+                        or mm[i + 1].layer.kind == "agg")
+            ok = (cascade_compatible(mm[i], mm[i + 1])
+                  and east_adjacent(self.rects[i], self.rects[i + 1],
+                                    exact_rows=not agg_edge))
+            links.append(ok)
+        return links
+
+    def dma_distances(self) -> List[int]:
+        """Longest Manhattan distance per inter-layer edge (for Eq. 5)."""
+        return [max_manhattan(self.rects[i], self.rects[i + 1])
+                for i in range(len(self.rects) - 1)]
+
+
+def place(model_mapping: ModelMapping,
+          rows: int = aie_arch.ARRAY_ROWS,
+          cols: int = aie_arch.ARRAY_COLS) -> Optional[Placement]:
+    """Bottom-left sequential placement (paper §5.2 / Fig. 8c).
+
+    For cascade-compatible consecutive layers we first try the east-adjacent
+    anchor (so that compatibility in mapping translates into an actual
+    cascade link, as in the paper's L2/L3 example); otherwise we fall back
+    to the generic bottom-left scan. Returns None if anything does not fit.
+    """
+    placed: List[Rect] = []
+    occ = [[False] * cols for _ in range(rows)]
+
+    def free(r0: int, c0: int, h: int, w: int) -> bool:
+        if r0 + h > rows or c0 + w > cols:
+            return False
+        return all(not occ[r][c] for r in range(r0, r0 + h)
+                   for c in range(c0, c0 + w))
+
+    def commit(rect: Rect) -> None:
+        for r, c in rect.tiles():
+            occ[r][c] = True
+        placed.append(rect)
+
+    mappings = model_mapping.mappings
+    for i, m in enumerate(mappings):
+        h, w = m.rows, m.cols
+        anchor: Optional[Rect] = None
+        # Preferred: east-adjacent to the previous layer when cascade-legal.
+        if placed and cascade_compatible(mappings[i - 1], m):
+            prev = placed[-1]
+            if prev.h == h and free(prev.r0, prev.c1, h, w):
+                anchor = Rect(prev.r0, prev.c1, h, w)
+        if anchor is None:
+            for r0 in range(rows):
+                for c0 in range(cols):
+                    if free(r0, c0, h, w):
+                        anchor = Rect(r0, c0, h, w)
+                        break
+                if anchor is not None:
+                    break
+        if anchor is None:
+            return None
+        commit(anchor)
+    return Placement(model_mapping=model_mapping, rects=tuple(placed))

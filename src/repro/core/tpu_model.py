@@ -1,0 +1,132 @@
+"""Overhead-aware TPU latency model (Tier B — the paper's Eq. 1-6 re-derived
+for the TPU memory/interconnect hierarchy).
+
+The paper's thesis is that at microsecond scale, *overheads that throughput
+frameworks ignore* (kernel prologue, synchronization, per-transfer init)
+dominate. On TPU the corresponding first-order terms are:
+
+  =====================  ===========================================
+  AIE-ML term            TPU term
+  =====================  ===========================================
+  VLIW prologue L_o      kernel dispatch/launch     (~2 us host-driven,
+                         ~0.5 us in a compiled program; we model the
+                         compiled-program figure)
+  lock sync (IO buffer)  HBM DMA issue latency per transfer (~1 us)
+  DMA 32 b/cyc           HBM bandwidth 819 GB/s
+  cascade 512 b/cyc      VMEM residency (~22 TB/s effective)
+  PLIO                   host<->device PCIe ingest  (~8 GB/s eff.)
+  Manhattan-hop 4*D      ICI hop latency (~1 us/hop, 50 GB/s/link)
+  =====================  ===========================================
+
+Used by :mod:`repro.core.fusion_planner` (which layers to fuse into one
+Pallas kernel) and by :mod:`repro.distributed.planner` (which per-layer
+shardings avoid resharding collectives), both direct analogues of §5.2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Hardware constants — TPU v5e-like target (task spec §Roofline)
+# ---------------------------------------------------------------------------
+
+PEAK_BF16_FLOPS: float = 197e12        #: per chip
+PEAK_INT8_OPS: float = 394e12          #: MXU int8 = 2x bf16
+HBM_BW: float = 819e9                  #: bytes/s per chip
+VMEM_BW: float = 22e12                 #: effective VMEM bytes/s
+ICI_BW: float = 50e9                   #: bytes/s per link
+VMEM_BYTES: int = 128 * 1024 * 1024    #: physical VMEM per core
+VMEM_BUDGET: int = 64 * 1024 * 1024    #: conservative planning budget
+
+KERNEL_LAUNCH_S: float = 0.5e-6        #: per-kernel dispatch inside a program
+DMA_ISSUE_S: float = 0.3e-6            #: per HBM transfer issue/sync
+ICI_HOP_S: float = 1.0e-6              #: per-hop latency
+HOST_INGRESS_BW: float = 8e9           #: PCIe-effective host->HBM
+MXU_PIPE_FILL_S: float = 0.05e-6       #: systolic-array fill (prologue analogue)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShape:
+    """An MM layer viewed by the TPU model: M x K x N at a given bytewidth."""
+    M: int
+    K: int
+    N: int
+    bytes_per_elem: int = 1            # int8
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.M * self.K * self.N
+
+    @property
+    def w_bytes(self) -> int:
+        return self.K * self.N * self.bytes_per_elem
+
+    @property
+    def in_bytes(self) -> int:
+        return self.M * self.K * self.bytes_per_elem
+
+    @property
+    def out_bytes(self) -> int:
+        return self.M * self.N * self.bytes_per_elem
+
+
+def compute_time_s(flops: float, *, int8: bool = True) -> float:
+    peak = PEAK_INT8_OPS if int8 else PEAK_BF16_FLOPS
+    return flops / peak + MXU_PIPE_FILL_S
+
+
+def kernel_time_s(flops: float, hbm_bytes: float, *, int8: bool = True,
+                  n_transfers: int = 1) -> float:
+    """One kernel launch: dispatch + max(compute, HBM traffic) + DMA issues.
+
+    Compute and HBM streaming overlap (XLA/Mosaic double-buffer the grid),
+    so we take the max — but the *issue* latencies serialize, which is
+    exactly the paper's point about L_init/L_o at the microsecond scale.
+    """
+    return (KERNEL_LAUNCH_S + n_transfers * DMA_ISSUE_S
+            + max(compute_time_s(flops, int8=int8), hbm_bytes / HBM_BW))
+
+
+def fused_chain_time_s(layers: Sequence[LayerShape]) -> float:
+    """Fused (cascade-analogue) execution of a layer chain in ONE kernel:
+    weights stream in once, activations stay in VMEM; only the chain input
+    and final output cross HBM."""
+    flops = sum(l.flops for l in layers)
+    hbm = (layers[0].in_bytes + layers[-1].out_bytes
+           + sum(l.w_bytes for l in layers))
+    # one input + one output + one weights transfer set
+    return kernel_time_s(flops, hbm, n_transfers=3)
+
+
+def unfused_chain_time_s(layers: Sequence[LayerShape]) -> float:
+    """Per-layer execution (DMA-mode analogue): every layer pays a launch
+    and round-trips its activation through HBM."""
+    t = 0.0
+    for l in layers:
+        hbm = l.in_bytes + l.w_bytes + l.out_bytes
+        t += kernel_time_s(l.flops, hbm, n_transfers=3)
+    return t
+
+
+def chain_vmem_bytes(layers: Sequence[LayerShape]) -> int:
+    """VMEM working set of a fused chain: all weights + biases resident,
+    plus the two largest activation buffers (double-buffered I/O)."""
+    w = sum(l.w_bytes + l.N * 4 for l in layers)     # weights + int32 bias
+    acts = sorted((l.in_bytes for l in layers), reverse=True)
+    acts += [layers[-1].out_bytes]
+    return w + sum(sorted(acts, reverse=True)[:2])
+
+
+def hbm_traffic_bytes(layers: Sequence[LayerShape],
+                      fused: bool) -> int:
+    """Total HBM bytes moved for one forward pass of the chain."""
+    if fused:
+        return (layers[0].in_bytes + layers[-1].out_bytes
+                + sum(l.w_bytes for l in layers))
+    return sum(l.in_bytes + l.w_bytes + l.out_bytes for l in layers)
+
+
+def ingest_time_s(n_bytes: int) -> float:
+    """Host -> device ingest (the PLIO analogue) for serving."""
+    return n_bytes / HOST_INGRESS_BW

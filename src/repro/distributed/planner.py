@@ -1,0 +1,204 @@
+"""Sharding planner — the paper's §5.2 DSE transferred to the chip mesh.
+
+The cascade rule (A = A', C = C' = 1 between consecutive layers) generalizes
+to: **consecutive layers must agree on the activation sharding**, so that no
+resharding collective (all-gather / all-to-all) sits on an inter-layer edge;
+the only collectives left are the unavoidable contraction psums inside TP
+layers and the MoE all-to-all — both overlappable. The planner enforces this
+by construction: ONE canonical activation spec everywhere, and parameter
+specs chosen so every layer consumes/produces that spec.
+
+Parameter rules (path-pattern based):
+  * contraction-input weights (d -> h): P(fsdp_axis, tp_axis)   [column-parallel]
+  * contraction-output weights (h -> d): P(tp_axis, fsdp_axis)  [row-parallel]
+  * expert stacks (E, d, f):            P(tp_axis, fsdp_axis, None)  [EP]
+  * embeddings (V, d):                  P(tp_axis, fsdp_axis)   [vocab-parallel]
+  * everything 1-D / norms:             replicated
+Every rule checks divisibility and falls back to replication — a plan is
+always compilable (dry-run requirement), just potentially less sharded.
+
+FSDP note: sharding a weight's contraction dim over ``data`` makes XLA
+all-gather it just-in-time per layer inside the scan — ZeRO-3 semantics with
+the gather overlapped one layer ahead (latency-hiding scheduler), the TPU
+analogue of cascade's producer/consumer overlap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """Which mesh axes play which role."""
+    fsdp_axis: Optional[str] = "data"     #: parameter sharding (ZeRO-3)
+    tp_axis: Optional[str] = "model"      #: tensor/expert parallelism
+    dp_axes: Tuple[str, ...] = ("pod", "data")   #: batch sharding
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    """Axis size; ``axis`` may be a name or a tuple of names (product)."""
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= _axis_size(mesh, a)
+        return n
+    if axis not in mesh.axis_names:
+        return 1
+    return mesh.shape[axis]
+
+
+def _div(dim: int, mesh: Mesh, axis):
+    """Use ``axis`` (name or tuple — e.g. ZeRO over ('pod','data')) for this
+    dim only if divisible (else replicate)."""
+    if isinstance(axis, tuple):
+        axis = tuple(a for a in axis if a in mesh.axis_names) or None
+        if axis is not None and len(axis) == 1:
+            axis = axis[0]
+    n = _axis_size(mesh, axis)
+    return axis if (n > 1 and dim % n == 0) else None
+
+
+# path-pattern -> role table. Patterns match the '/'-joined pytree path.
+# Plain "wg"/"wu"/"wd"/"wi"/"wo" cover the raw-array MLP params (swiglu /
+# gelu_mlp); "<name>/w" covers dense_init-nested weights.
+_COL = ("wq/w", "wk/w", "wv/w", "wg", "wu", "wi", "wi/w", "wx/w", "wy/w",
+        "wup/w", "wgate/w", "wq_a/w", "wq_b/w", "wkv_a/w", "wkv_b/w",
+        "ffn_up/w", "wz/w", "rz/w", "ri/w", "rf/w", "wf/w", "wa/w")
+_ROW = ("wo/w", "wd", "wo", "wdown/w", "ffn_dn/w")
+
+
+def _spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh,
+              plan: PlanConfig) -> P:
+    fs, tp = plan.fsdp_axis, plan.tp_axis
+    nd = len(shape)
+    # strip scan-stacking prefix dims (groups / enc / dec stacks): any dims
+    # beyond the rule's arity are leading stack dims -> replicated.
+    def pad(spec_tail: Tuple) -> P:
+        return P(*([None] * (nd - len(spec_tail)) + list(spec_tail)))
+
+    if "embedding" in path or "emb" in path.split("/")[-1]:
+        if nd >= 2:
+            return pad((_div(shape[-2], mesh, tp), _div(shape[-1], mesh, fs)))
+        return P(None)
+    if path.endswith("router"):
+        return pad((_div(shape[-2], mesh, fs), None))
+    # MoE expert stacks: (E, d, f) / (E, f, d). Path-scoped to "moe/" so
+    # scan-stacked dense swiglu (G, d, f) — same suffixes, same rank — takes
+    # the column/row rules instead. The always-on shared expert is a dense
+    # swiglu too.
+    if (nd >= 3 and "moe/" in path and "shared" not in path
+            and any(path.endswith(s) for s in ("wg", "wu", "wd"))):
+        e_ax = _div(shape[-3], mesh, tp)
+        # E < tp (mixtral: 8 experts, 16-way model axis): fall back to
+        # sharding the free (d_ff) dim over tp, else the stack replicates
+        # 16x (measured 31.6 GiB/device of arguments — EXPERIMENTS.md §Perf)
+        f_ax = None if e_ax is not None else _div(shape[-1], mesh, tp)
+        return pad((e_ax, _div(shape[-2], mesh, fs), f_ax))
+    if any(path.endswith(s) for s in _COL) and nd >= 2:
+        return pad((_div(shape[-2], mesh, fs), _div(shape[-1], mesh, tp)))
+    if any(path.endswith(s) for s in _ROW) and nd >= 2:
+        return pad((_div(shape[-2], mesh, tp), _div(shape[-1], mesh, fs)))
+    if path.endswith("conv") and nd >= 2:          # depthwise conv kernels
+        return pad((None, _div(shape[-1], mesh, tp)))
+    # biases, norms, gates, lambdas: replicate
+    return P(*([None] * nd))
+
+
+def params_sharding(params: Any, mesh: Mesh,
+                    plan: PlanConfig = PlanConfig()) -> Any:
+    """Pytree of NamedShardings matching ``params`` (works on avals too)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_pstr(p) for p in path)
+        spec = _spec_for(key, leaf.shape, mesh, plan)
+        out.append(NamedSharding(mesh, spec))
+    return treedef.unflatten(out)
+
+
+def _pstr(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def activation_spec(mesh: Mesh, plan: PlanConfig = PlanConfig(),
+                    *, seq_axis: Optional[str] = None) -> P:
+    """THE canonical activation sharding (B, S, d): batch over dp axes,
+    optional sequence parallelism, features replicated. Every layer
+    consumes and produces this — the cascade-consistency invariant."""
+    dp = tuple(a for a in plan.dp_axes if a in mesh.axis_names)
+    return P(dp, seq_axis, None)
+
+
+def batch_spec(mesh: Mesh, plan: PlanConfig = PlanConfig(),
+               *, extra_dims: int = 1) -> P:
+    dp = tuple(a for a in plan.dp_axes if a in mesh.axis_names)
+    return P(dp, *([None] * extra_dims))
+
+
+def cache_sharding(cache: Any, mesh: Mesh,
+                   plan: PlanConfig = PlanConfig(),
+                   batch_size: Optional[int] = None) -> Any:
+    """KV caches: batch over dp axes; the largest remaining dim over TP.
+
+    Preferring the *largest* TP-divisible dim naturally picks the sequence
+    dim of KV caches (32k..512k) — distributed flash-decode: per-shard
+    partial attention + tiny cross-shard softmax collectives — instead of
+    head/feature dims whose contraction sharding would all-reduce the full
+    (B, H, T) score tensor every layer. (Perf log: EXPERIMENTS.md §Perf.)
+
+    Leaves with a leading scan-stack dim get a None prefix automatically:
+    the batch dim is detected as the first of the leading two dims divisible
+    by the dp-axis product.
+    """
+    dp = tuple(a for a in plan.dp_axes if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def one(leaf):
+        shape = leaf.shape
+        if not shape:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        # find the batch dim: the first of the leading two dims EQUAL to the
+        # declared batch (a scan-stack group count that happens to divide dp
+        # must not be mistaken for batch — that all-gathers the whole cache,
+        # measured 320 GiB/device on qwen1.5 decode; EXPERIMENTS.md §Perf).
+        # Fallback without a hint: first leading dim divisible by dp.
+        batch_dim = None
+        for i, d in enumerate(shape[:2]):
+            if batch_size is not None and d != batch_size:
+                continue
+            if dp_size > 1 and d % dp_size == 0:
+                spec[i] = dp
+                batch_dim = i
+                break
+        # shard the LARGEST remaining TP-divisible dim (beyond any leading
+        # scan-stack dim) over the TP axis
+        tp = plan.tp_axis
+        tpn = _axis_size(mesh, tp)
+        if tp and tpn > 1 and len(shape) >= 3:
+            first = (batch_dim + 1) if batch_dim is not None else 1
+            cands = [(shape[j], j) for j in range(first, len(shape))
+                     if spec[j] is None and shape[j] % tpn == 0
+                     and shape[j] >= tpn]
+            if cands:
+                _, j = max(cands)
+                spec[j] = tp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache)

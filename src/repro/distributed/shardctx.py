@@ -1,0 +1,164 @@
+"""Trace-time sharding-hint context for model internals.
+
+The planner (``distributed/planner.py``) pins parameter and boundary
+activation shardings, but tensors *inside* a block (attention heads, MoE
+dispatch) are invisible to it. This module provides a context that step
+builders activate around the model body; model code calls ``constrain_*``
+helpers which are no-ops outside the context (so models stay pure and
+single-host tests see zero sharding machinery).
+
+The head constraint is the Megatron-TP rule: q/k/v shard over the TP axis on
+the head dim, so attention scores — the largest tensors in long-sequence
+cells — are head-sharded instead of replicated. Head counts that don't
+divide the axis (e.g. 40 heads on TP=16, or 8 KV heads on TP=16) shard
+UNEVENLY (GSPMD pads); partial idleness beats a replicated (B,H,S,T) score
+tensor by the full TP degree. Measured effect: EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE: List[Tuple[Mesh, str, Tuple[str, ...]]] = []
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh: Optional[Mesh], *, tp_axis: str = "model",
+                   dp_axes: Tuple[str, ...] = ("pod", "data")):
+    """Activate sharding hints while tracing a step function."""
+    if mesh is None or tp_axis not in mesh.axis_names:
+        yield
+        return
+    _STATE.append((mesh, tp_axis,
+                   tuple(a for a in dp_axes if a in mesh.axis_names)))
+    try:
+        yield
+    finally:
+        _STATE.pop()
+
+
+def active() -> bool:
+    return bool(_STATE)
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """(B, S, H, hd): batch over dp, heads over tp. No-op out of context,
+    for decode-shaped inputs (S == 1; cache layout rules there), and for
+    single-head tensors."""
+    if not _STATE or x.ndim != 4 or x.shape[1] <= 1 or x.shape[2] <= 1:
+        return x
+    mesh, tp, dp = _STATE[-1]
+    if mesh.shape[tp] <= 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, None, tp, None)))
+
+
+def constrain_seq_q(x: jax.Array) -> jax.Array:
+    """(B, S, H, hd) query: batch over dp, SEQUENCE over tp — sequence-
+    parallel dense attention. Scores come out (B, g, r, S/tp, T): bounded
+    memory for every head count (no GQA-reshape divisibility trap), and the
+    q-seq sharding coincides with the boundary SP spec, so the attention
+    block adds zero activation resharding (cascade-consistency). Requires
+    k/v full-sequence (see constrain_replicated_kv)."""
+    if not _STATE or x.ndim != 4 or x.shape[1] <= 1:
+        return x
+    mesh, tp, dp = _STATE[-1]
+    if mesh.shape[tp] <= 1 or x.shape[1] % mesh.shape[tp] != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, tp, None, None)))
+
+
+def constrain_replicated_kv(x: jax.Array) -> jax.Array:
+    """(B, T, KV, hd) keys/values for seq-parallel attention: batch over dp,
+    everything else replicated (the per-layer k/v all-gather operand is tiny
+    relative to the score tensor it avoids resharding)."""
+    if not _STATE or x.ndim != 4 or x.shape[1] <= 1:
+        return x
+    mesh, tp, dp = _STATE[-1]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, None, None, None)))
+
+
+def tp_size() -> int:
+    if not _STATE:
+        return 1
+    mesh, tp, _ = _STATE[-1]
+    return mesh.shape[tp]
+
+
+def moe_group_split(S: int) -> int:
+    """Split factor turning seq shards into device-local dispatch groups:
+    under sequence parallelism, reshaping (G, S, d) -> (G*tp, S/tp, d) is a
+    zero-communication relabeling (same layout), and it makes the dispatch
+    einsum's contraction LOCAL — without it, contracting the seq-sharded
+    dim turns every MoE tensor into a partial sum over tp (measured
+    280 GiB/device of f32 all-reduces on mixtral; EXPERIMENTS.md §4.2)."""
+    tpn = tp_size()
+    return tpn if (tpn > 1 and S % tpn == 0) else 1
+
+
+def constrain_experts(x: jax.Array, expert_axis: int) -> jax.Array:
+    """MoE dispatched tokens, E >= tp: shard experts over tp (the EP
+    all-to-all routes tokens), local groups over dp."""
+    if not _STATE:
+        return x
+    mesh, tp, dp = _STATE[-1]
+    tpn = mesh.shape[tp]
+    if tpn <= 1 or x.shape[expert_axis] % tpn != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[expert_axis] = tp
+    if expert_axis == 0 and x.ndim >= 2:
+        dpn = 1
+        for a in dp:
+            dpn *= mesh.shape[a]
+        if dpn > 1 and x.shape[1] % dpn == 0:
+            spec[1] = dp
+    elif expert_axis != 0:
+        spec[0] = dp
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_axes(x: jax.Array, tp_dims=(), dp_dims=()) -> jax.Array:
+    """Generic: pin listed dims to tp / dp axes (uneven sharding allowed).
+    Used to keep one consistent layout through nested-scan bodies, where
+    GSPMD would otherwise re-decide (and reshard) per tile."""
+    if not _STATE:
+        return x
+    mesh, tp, dp = _STATE[-1]
+    if mesh.shape[tp] <= 1:
+        return x
+    spec = [None] * x.ndim
+    for d in tp_dims:
+        if x.shape[d] > 1:
+            spec[d] = tp
+    for d in dp_dims:
+        if dp and x.shape[d] > 1:
+            spec[d] = dp
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_moe_tokens(x: jax.Array, token_axis: int = 1) -> jax.Array:
+    """MoE dispatched tokens, E < tp (mixtral: 8 experts, 16-way axis):
+    shard the device-local group dim over dp+tp — expert compute is pure
+    data parallelism over token slots; expert weights stream to the data
+    (FSDP gather) instead of activations partial-summing."""
+    if not _STATE:
+        return x
+    mesh, tp, dp = _STATE[-1]
+    n = mesh.shape[tp]
+    for a in dp:
+        n *= mesh.shape[a]
+    if n <= 1 or x.shape[token_axis] % n != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[token_axis] = (*dp, tp)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,243 @@
+"""Distributed train / serve step builders + dry-run input specs.
+
+``make_train_step`` / ``make_prefill`` / ``make_decode_step`` return pure
+functions ready for ``jax.jit`` with the planner's shardings. The vocab
+dimension of the logits is explicitly TP-sharded (with_sharding_constraint)
+so the 202k-vocab cross-entropy never materializes replicated logits — the
+loss does its logsumexp with a psum over the TP axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import build
+from .planner import PlanConfig, activation_spec, batch_spec, _div
+from . import shardctx
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean cross entropy; logits may be vocab-sharded (psum-safe ops)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def _make_constrain(cfg: ArchConfig, mesh: Optional[Mesh], plan: PlanConfig,
+                    seq_shard: bool):
+    """Activation-sharding constraint applied at every group boundary — the
+    mesh-level cascade-consistency rule (DESIGN.md §2 T3). With ``seq_shard``
+    the sequence dim shards over the TP axis between blocks (Megatron-style
+    sequence parallelism): saved remat activations shrink by the TP degree,
+    paid for with the per-block all-gather/reduce-scatter pair that the
+    roofline's collective term makes visible.
+    """
+    if mesh is None or cfg.enc_layers:
+        return None
+    dp = tuple(a for a in plan.dp_axes if a in mesh.axis_names)
+    tp = plan.tp_axis if plan.tp_axis in mesh.axis_names else None
+    tpn = mesh.shape[tp] if tp else 1
+
+    def constrain(x):
+        seq_ok = seq_shard and tp and x.shape[1] % tpn == 0 and x.ndim == 3
+        spec = P(dp, tp if seq_ok else None, None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def make_train_step(cfg: ArchConfig, ocfg: optim.AdamWConfig, *,
+                    mesh: Optional[Mesh] = None,
+                    plan: PlanConfig = PlanConfig(),
+                    remat: bool = True,
+                    seq_shard: bool = True,
+                    accum: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch keys: tokens/labels (LM), + frames (audio), or embeds (vlm).
+    ``accum > 1`` splits the batch into microbatches and accumulates
+    gradients in a ``lax.scan`` — transient activation memory shrinks by the
+    accumulation factor at identical math (loss/grads are microbatch means).
+    """
+    model = build(cfg, remat=remat)
+    # vocab-shard the logits over TP even when the vocab is not divisible
+    # (GSPMD pads): a replicated (B, S, V) f32 logits tensor is the single
+    # largest buffer of a train step for odd-vocab archs (whisper's 51865).
+    tp_ok = (mesh is not None and plan.tp_axis in mesh.axis_names
+             and cfg.vocab >= mesh.shape[plan.tp_axis])
+    logits_spec = (None if mesh is None else
+                   P(tuple(a for a in plan.dp_axes if a in mesh.axis_names),
+                     None, plan.tp_axis if tp_ok else None))
+    constrain = _make_constrain(cfg, mesh, plan, seq_shard)
+    fwd_kw = {} if (cfg.enc_layers or constrain is None) else {
+        "constrain": constrain}
+
+    def loss_fn(p, batch):
+        if cfg.enc_layers:
+            logits, aux = model.forward(p, batch["tokens"],
+                                        batch["frames"])
+        elif cfg.frontend == "vision_stub":
+            logits, aux = model.forward(p, None, embeds=batch["embeds"],
+                                        **fwd_kw)
+        else:
+            logits, aux = model.forward(p, batch["tokens"], **fwd_kw)
+        if logits_spec is not None:
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(mesh, logits_spec))
+        ce = softmax_xent(logits, batch["labels"])
+        return ce + 1e-2 * aux, ce
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        ctx = shardctx.sharding_hints(mesh, tp_axis=plan.tp_axis or "model",
+                                      dp_axes=plan.dp_axes)
+        with ctx:
+            if accum == 1:
+                (loss, ce), grads = grad_fn(params, batch)
+            else:
+                micro = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:]), batch)
+
+                def acc_body(carry, mb):
+                    gsum, lsum, csum = carry
+                    (l, c), g = grad_fn(params, mb)
+                    gsum = jax.tree.map(jnp.add, gsum, g)
+                    return (gsum, lsum + l, csum + c), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum, csum), _ = jax.lax.scan(
+                    acc_body, (zeros, jnp.zeros(()), jnp.zeros(())), micro)
+                grads = jax.tree.map(lambda g: g / accum, gsum)
+                loss, ce = lsum / accum, csum / accum
+        params2, opt2, metrics = optim.update(ocfg, grads, opt_state, params)
+        metrics.update({"loss": loss, "ce": ce})
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ArchConfig, *, remat: bool = False,
+                 mesh: Optional[Mesh] = None,
+                 plan: PlanConfig = PlanConfig(),
+                 seq_shard: bool = True) -> Callable:
+    """(params, batch) -> logits — full-sequence forward (inference prefill)."""
+    model = build(cfg, remat=remat)
+    constrain = _make_constrain(cfg, mesh, plan, seq_shard)
+    fwd_kw = {} if (cfg.enc_layers or constrain is None) else {
+        "constrain": constrain}
+
+    def prefill(params, batch):
+      with shardctx.sharding_hints(mesh, tp_axis=plan.tp_axis or "model",
+                                   dp_axes=plan.dp_axes):
+        if cfg.enc_layers:
+            logits, _ = model.forward(params, batch["tokens"],
+                                      batch["frames"])
+        elif cfg.frontend == "vision_stub":
+            logits, _ = model.forward(params, None, embeds=batch["embeds"],
+                                      **fwd_kw)
+        else:
+            logits, _ = model.forward(params, batch["tokens"], **fwd_kw)
+        return logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    """(params, token, cache) -> (logits, cache) — one serve_step token."""
+    model = build(cfg)
+
+    def decode(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch x shape) cell.
+
+    For ``[audio]``/``[vlm]`` the frontend is a stub: specs carry precomputed
+    frame/patch embeddings of the backbone width.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        # decode inputs are a single token; the context lives in the cache
+        out: Dict[str, Any] = {"token": _sds((B, 1), jnp.int32)}
+        return out
+    batch: Dict[str, Any] = {}
+    if cfg.enc_layers:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        batch["frames"] = _sds((B, S), jnp.int32)  # placeholder; fixed below
+        batch["frames"] = _sds((B, min(S, 1500), cfg.d_model), jnp.bfloat16)
+    elif cfg.frontend == "vision_stub":
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if shape.is_train:
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> Any:
+    """ShapeDtypeStruct pytree for the decode cache (eval_shape — no alloc)."""
+    assert shape.kind == "decode"
+    model = build(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.enc_layers:
+        params_sds = jax.eval_shape(model.init, jax.random.key(0))
+        frames = _sds((B, min(S, 1500), cfg.d_model), jnp.bfloat16)
+        # close over max_len: shapes must stay concrete under eval_shape
+        return jax.eval_shape(lambda p, f: model.init_cache(p, f, S),
+                              params_sds, frames)
+    return jax.eval_shape(lambda: model.init_cache(B, S))
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                    plan: PlanConfig = PlanConfig()) -> Any:
+    """NamedShardings for input_specs output: batch dim over dp axes; for 3-D
+    embedding inputs (vlm/audio stubs) the sequence dim additionally shards
+    over the TP axis, matching the canonical activation spec."""
+    dp = tuple(a for a in plan.dp_axes if a in mesh.axis_names)
+    tp = plan.tp_axis if plan.tp_axis in mesh.axis_names else None
+    tpn = mesh.shape[tp] if tp else 1
+
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+
+    def one(sds):
+        spec = [None] * len(sds.shape)
+        # batch dim shards only when divisible (long_500k has batch 1)
+        if dpn > 1 and sds.shape[0] % dpn == 0:
+            spec[0] = dp
+        if len(sds.shape) == 3 and tp and sds.shape[1] % tpn == 0:
+            spec[1] = tp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, input_specs(cfg, shape))

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* ``mm_int8``      — blocked INT8 MM + fused bias/ReLU/requant epilogue
+                     (the per-layer baseline; §4.1 single-AIE kernel analogue)
+* ``cascade_mlp``  — fused multi-layer MLP / DeepSets in one pallas_call with
+                     VMEM-resident intermediates (the cascade analogue — the
+                     paper's core mechanism)
+* ``global_agg``   — set reduction as a ones-row MXU matmul (§4.3.1 MAC
+                     trick) vs. the extract/add VPU baseline
+
+Every kernel has ``ops.py`` (jitted public wrapper, handles padding) and
+``ref.py`` (pure-jnp oracle); tests sweep shapes and assert exact integer
+equality (INT8 pipelines are bit-exact — no tolerance needed).
+"""
+from . import mm_int8, cascade_mlp, global_agg
+
+__all__ = ["mm_int8", "cascade_mlp", "global_agg"]

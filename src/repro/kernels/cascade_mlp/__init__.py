@@ -1,0 +1,5 @@
+from .ops import cascade_mlp, deepsets, mlp_unfused
+from .ref import cascade_mlp_ref, deepsets_ref, global_agg_ref
+
+__all__ = ["cascade_mlp", "deepsets", "mlp_unfused",
+           "cascade_mlp_ref", "deepsets_ref", "global_agg_ref"]

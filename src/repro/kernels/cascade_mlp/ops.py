@@ -1,0 +1,83 @@
+"""Jitted wrappers for the fused cascade MLP / DeepSets kernels.
+
+Handles padding to TPU tile alignment and (for the MLP) slicing back.
+The QuantizedMLP pytree is treated as static structure + dynamic arrays:
+wrappers are re-traced per model architecture, cached by jax.jit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import QuantizedLinear, QuantizedMLP
+from .cascade_mlp import cascade_mlp_pallas, deepsets_pallas
+
+
+def _round_up(a: int, b: int) -> int:
+    return -(-a // b) * b
+
+
+def _pad_qmlp(qmlp: QuantizedMLP, k_align: int = 128,
+              n_align: int = 128) -> QuantizedMLP:
+    """Pad every layer's (K, N) to the lane-aligned tile grid. Both dims use
+    the 128 lane width so layer i's padded N equals layer i+1's padded K and
+    activations chain without relayout (the paper's "consistent partition"
+    condition, §3.2). Zero pads preserve exact integer semantics (zero
+    rows/cols contribute nothing; bias pads are zero; ReLU and shifts act
+    elementwise)."""
+    layers = []
+    for l in qmlp.layers:
+        k, n = l.w_q.shape
+        kp, np_ = _round_up(k, k_align), _round_up(n, n_align)
+        w = jnp.pad(l.w_q, ((0, kp - k), (0, np_ - n)))
+        b = None if l.bias_q is None else jnp.pad(l.bias_q, (0, np_ - n))
+        layers.append(QuantizedLinear(w_q=w, bias_q=b, shift=l.shift,
+                                      relu=l.relu, e_w=l.e_w, e_out=l.e_out))
+    return QuantizedMLP(e_in=qmlp.e_in, layers=tuple(layers))
+
+
+def cascade_mlp(x: jax.Array, qmlp: QuantizedMLP, *,
+                interpret: bool = False) -> jax.Array:
+    """Fused MLP forward. x: (M, K0) int8 (any M/K0); returns (M, N_L) int8."""
+    M, K0 = x.shape
+    n_out = qmlp.layers[-1].w_q.shape[1]
+    qp = _pad_qmlp(qmlp)
+    k0p = qp.layers[0].w_q.shape[0]
+    block_m = min(128, _round_up(M, 8))
+    Mp = _round_up(M, block_m)
+    xp = jnp.pad(x, ((0, Mp - M), (0, k0p - K0)))
+    out = cascade_mlp_pallas(xp, qp, block_m=block_m, interpret=interpret)
+    return out[:M, :n_out]
+
+
+def deepsets(x: jax.Array, phi: QuantizedMLP, rho: QuantizedMLP, *,
+             agg: str = "mean", interpret: bool = False) -> jax.Array:
+    """Fully-fused DeepSets forward. x: (M, F) int8 -> (1, classes) int8.
+
+    M is padded to a power of two with zero rows; for 'mean' the divisor is
+    the padded M (callers quantize with that convention — matching the
+    hardware, where the ones-row MAC reduces the padded block).
+    """
+    M, F = x.shape
+    Mp = 1 << (M - 1).bit_length()
+    phi_p, rho_p = _pad_qmlp(phi), _pad_qmlp(rho)
+    f_p = phi_p.layers[0].w_q.shape[0]
+    xp = jnp.pad(x, ((0, Mp - M), (0, f_p - F)))
+    n_out = rho.layers[-1].w_q.shape[1]
+    out = deepsets_pallas(xp, phi_p, rho_p, agg=agg, interpret=interpret)
+    return out[:, :n_out]
+
+
+def mlp_unfused(x: jax.Array, qmlp: QuantizedMLP, *,
+                interpret: bool = False) -> jax.Array:
+    """Per-layer baseline: one mm_int8 pallas_call per layer, activations
+    round-tripping HBM between launches (the DMA-mode analogue)."""
+    from repro.kernels.mm_int8 import mm_int8
+    a = x
+    for l in qmlp.layers:
+        a = mm_int8(a, l.w_q, l.bias_q, shift=l.shift, relu=l.relu,
+                    interpret=interpret)
+    return a

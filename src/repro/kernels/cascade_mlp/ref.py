@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused cascade MLP / DeepSets kernels."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.quant import QuantizedMLP, requantize_shift
+from repro.kernels.mm_int8.ref import mm_int8_ref
+
+
+def cascade_mlp_ref(x: jnp.ndarray, qmlp: QuantizedMLP) -> jnp.ndarray:
+    """Layer-by-layer oracle: y_i = requant(relu(y_{i-1} @ w_i + b_i))."""
+    a = x
+    for layer in qmlp.layers:
+        b = None if layer.bias_q is None else layer.bias_q
+        a = mm_int8_ref(a, layer.w_q, b, shift=layer.shift, relu=layer.relu)
+    return a
+
+
+def global_agg_ref(x: jnp.ndarray, *, op: str = "sum") -> jnp.ndarray:
+    """Sum/mean over the set (M) dimension; INT32 accumulation.
+
+    Mean uses the paper's power-of-two shift (M is a power of two in the
+    DeepSets workloads); result stays INT32 for 'sum', INT8 for 'mean'.
+    """
+    acc = jnp.sum(x.astype(jnp.int32), axis=0, keepdims=True)
+    if op == "sum":
+        return acc
+    m = x.shape[0]
+    assert m & (m - 1) == 0, "mean reduction needs power-of-two M (paper)"
+    return requantize_shift(acc, m.bit_length() - 1)
+
+
+def deepsets_ref(x: jnp.ndarray, phi: QuantizedMLP, rho: QuantizedMLP, *,
+                 agg: str = "mean") -> jnp.ndarray:
+    """phi MLP -> global aggregation -> rho MLP, all INT8/INT32."""
+    h = cascade_mlp_ref(x, phi)
+    g = global_agg_ref(h, op=agg)
+    if agg == "sum":
+        # rho consumes INT8: requantize the INT32 sum by log2(M) like mean
+        m = x.shape[0]
+        g = requantize_shift(g, m.bit_length() - 1)
+    return cascade_mlp_ref(g, rho)

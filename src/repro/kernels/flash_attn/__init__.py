@@ -1,0 +1,5 @@
+from .flash_attn import flash_attention
+from .ops import flash_mha
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention", "flash_mha", "flash_attention_ref"]

@@ -1,0 +1,4 @@
+from .ops import global_agg
+from .ref import global_agg_ref
+
+__all__ = ["global_agg", "global_agg_ref"]

@@ -1,0 +1,32 @@
+"""Jitted wrapper for the global aggregation kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .global_agg import global_agg_pallas, DEFAULT_BLOCK_F
+
+
+def _round_up(a: int, b: int) -> int:
+    return -(-a // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("op", "impl", "interpret"))
+def global_agg(x: jax.Array, *, op: str = "sum", impl: str = "mac",
+               interpret: bool = False) -> jax.Array:
+    """Sum/mean over the set dimension of an (M, F) int8 matrix.
+
+    Zero-pads F to the lane width; for 'mean', M is padded to a power of two
+    (zero rows don't change the sum; the divisor is the padded M, matching
+    the hardware ones-row MAC over the padded block).
+    """
+    M, F = x.shape
+    block_f = min(DEFAULT_BLOCK_F, _round_up(F, 128))
+    Fp = _round_up(F, block_f)
+    Mp = 1 << (M - 1).bit_length() if op == "mean" else M
+    xp = jnp.pad(x, ((0, Mp - M), (0, Fp - F)))
+    out = global_agg_pallas(xp, op=op, impl=impl, block_f=block_f,
+                            interpret=interpret)
+    return out[:, :F]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the global aggregation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant import requantize_shift
+
+
+def global_agg_ref(x: jnp.ndarray, *, op: str = "sum") -> jnp.ndarray:
+    """Reduce the set dimension M of an (M, F) int8 matrix.
+
+    'sum'  -> (1, F) int32
+    'mean' -> (1, F) int8 via power-of-two shift (M must be a power of two,
+              the paper's DeepSets setting).
+    """
+    acc = jnp.sum(x.astype(jnp.int32), axis=0, keepdims=True)
+    if op == "sum":
+        return acc
+    m = x.shape[0]
+    assert m & (m - 1) == 0
+    return requantize_shift(acc, m.bit_length() - 1)

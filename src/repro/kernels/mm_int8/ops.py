@@ -1,0 +1,49 @@
+"""Jitted public wrapper for the INT8 MM kernel: padding + dispatch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .mm_int8 import mm_int8_pallas
+
+
+def _round_up(a: int, b: int) -> int:
+    return -(-a // b) * b
+
+
+def _pick_block(dim: int, pref: int, align: int) -> int:
+    """Largest block <= pref that is a multiple of ``align`` covering dim."""
+    if dim <= align:
+        return align
+    return min(pref, _round_up(dim, align)) if dim < pref else pref
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "relu", "out_int8",
+                                             "interpret"))
+def mm_int8(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None, *,
+            shift: int = 0, relu: bool = False, out_int8: bool = True,
+            interpret: bool = False) -> jax.Array:
+    """INT8 dense layer y = requant(relu(x @ w + b)); arbitrary shapes.
+
+    Pads (M, K, N) to the TPU tile grid — sublane multiples of 8 for M,
+    lane multiples of 128 for N, K multiple of 32 for int8 packing — runs
+    the Pallas kernel, and slices the result back.
+    """
+    M, K = x.shape
+    _, N = w.shape
+    block_m = _pick_block(M, 128, 8)
+    block_n = _pick_block(N, 128, 128)
+    Mp, Kp, Np = _round_up(M, block_m), _round_up(K, 32), _round_up(N, block_n)
+
+    xp = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+    bp = None
+    if bias is not None:
+        bp = jnp.pad(bias.reshape(1, N), ((0, 0), (0, Np - N)))
+    out = mm_int8_pallas(xp, wp, bp, shift=shift, relu=relu,
+                         out_int8=out_int8, block_m=block_m, block_n=block_n,
+                         interpret=interpret)
+    return out[:M, :N]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the INT8 MM (+bias+ReLU+requant) kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.quant import requantize_shift
+
+
+def mm_int8_ref(x: jnp.ndarray, w: jnp.ndarray,
+                bias: Optional[jnp.ndarray] = None, *, shift: int = 0,
+                relu: bool = False, out_int8: bool = True) -> jnp.ndarray:
+    """y = requant(relu(x @ w + b)) with INT32 accumulation.
+
+    x: (M, K) int8, w: (K, N) int8, bias: (N,) int32.
+    """
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    acc = jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if not out_int8:
+        return acc
+    return requantize_shift(acc, shift)

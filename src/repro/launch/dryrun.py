@@ -1,0 +1,352 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run launcher (deliverable e).
+
+Proves the distribution config is coherent without hardware: for every
+(architecture x input shape x mesh) cell, ``jax.jit(step).lower(...)`` +
+``.compile()`` must succeed on the production mesh, and the compiled
+artifact yields the roofline terms (deliverable g).
+
+The FIRST TWO LINES of this file create 512 placeholder host devices —
+before any other import, since jax locks the device count on first init.
+Do not import this module from tests/benchmarks (they must see 1 device).
+
+Usage:
+    # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen3-14b --shape train_4k --mesh single --out cell.json
+    # the full 40-cell sweep on both meshes (subprocess per cell)
+    PYTHONPATH=src python -m repro.launch.dryrun --sweep --outdir results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import ARCH_NAMES, SHAPES, SHAPES_BY_NAME, cell_runnable, get
+from repro.core import tpu_model
+from repro.distributed import steps
+from repro.distributed.planner import (PlanConfig, cache_sharding,
+                                       params_sharding)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+
+HBM_PER_CHIP = 16 * 1024**3          # v5e: 16 GiB
+
+
+# ---------------------------------------------------------------------------
+# lowering one cell
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               seq_shard: bool = True, remat: bool = True,
+               moment_dtype: str = "float32", accum: int = 1,
+               kv_dtype: str = None):
+    """Build the right step function + avals and lower it on ``mesh``.
+
+    Returns (lowered, meta) — no device allocation happens anywhere
+    (params/batch/cache are ShapeDtypeStructs via eval_shape).
+    """
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = get(arch)
+    if shape.kind == "decode":
+        # int8 KV (paper's pow2 scheme) for the MHA-cache archs whose bf16
+        # cache exceeds pod HBM (qwen1.5: 10.9 TB at 128 x 32k x 40 heads)
+        kv = kv_dtype or ("int8" if cfg.n_kv >= 32 or cfg.n_experts >= 64
+                          else "bfloat16")
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv)
+    # >=100B params: extend ZeRO-3 sharding across the pod axis (params/
+    # optimizer cannot fit one pod's HBM; gathers cross the inter-pod link,
+    # mitigated by gradient compression — DESIGN.md §5)
+    if "pod" in mesh.axis_names and cfg.param_count() > 100e9:
+        plan = PlanConfig(fsdp_axis=("pod", "data"))
+    else:
+        plan = PlanConfig()
+    model = build(cfg, remat=remat)
+    params_avals = jax.eval_shape(model.init, jax.random.key(0))
+    if shape.kind != "train":
+        # serving tiers deploy bf16 weights (cast-on-use models are dtype
+        # agnostic); halves the parameter HBM of prefill/decode cells
+        params_avals = jax.tree.map(
+            lambda a: (jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+                       if a.dtype == jnp.float32 else a), params_avals)
+    p_sh = params_sharding(params_avals, mesh, plan)
+    batch_avals = steps.input_specs(cfg, shape)
+    b_sh = steps.batch_shardings(cfg, shape, mesh, plan)
+
+    if shape.kind == "train":
+        from jax.sharding import NamedSharding, PartitionSpec
+        ocfg = optim.AdamWConfig(moment_dtype=moment_dtype)
+        opt_avals = jax.eval_shape(
+            lambda p: optim.init(p, jnp.dtype(moment_dtype)), params_avals)
+        o_sh = optim.AdamWState(
+            step=NamedSharding(mesh, PartitionSpec()),
+            mu=params_sharding(opt_avals.mu, mesh, plan),
+            nu=params_sharding(opt_avals.nu, mesh, plan))
+        fn = steps.make_train_step(cfg, ocfg, mesh=mesh, plan=plan,
+                                   remat=remat, seq_shard=seq_shard,
+                                   accum=accum)
+        jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(params_avals, opt_avals, batch_avals)
+    elif shape.kind == "prefill":
+        fn = steps.make_prefill(cfg, mesh=mesh, plan=plan,
+                                seq_shard=seq_shard)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        with mesh:
+            lowered = jitted.lower(params_avals, batch_avals)
+    else:   # decode: serve_step — one new token against a seq_len KV cache
+        cache_avals = steps.cache_specs(cfg, shape)
+        c_sh = cache_sharding(cache_avals, mesh, plan,
+                              batch_size=shape.global_batch)
+        fn = steps.make_decode_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh["token"], c_sh),
+                         donate_argnums=(2,))
+        with mesh:
+            lowered = jitted.lower(params_avals, batch_avals["token"],
+                                   cache_avals)
+    meta = {"cfg": cfg, "shape": shape}
+    return lowered, meta
+
+
+# ---------------------------------------------------------------------------
+# roofline terms from the compiled artifact
+# ---------------------------------------------------------------------------
+
+def roofline_terms(hlo: hlo_analysis.HLOAnalysis, n_chips: int,
+                   cfg, shape) -> Dict[str, Any]:
+    compute_s = hlo.flops / tpu_model.PEAK_BF16_FLOPS
+    memory_s = hlo.hbm_bytes / tpu_model.HBM_BW
+    collective_s = hlo.collective_bytes / tpu_model.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens, factor = shape.global_batch * shape.seq_len, 6
+    elif shape.kind == "prefill":
+        tokens, factor = shape.global_batch * shape.seq_len, 2
+    else:
+        tokens, factor = shape.global_batch, 2
+    model_flops = factor * n_active * tokens
+    hlo_flops_global = hlo.flops * n_chips
+    bound_s = max(terms.values())
+    ideal_s = model_flops / (n_chips * tpu_model.PEAK_BF16_FLOPS)
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flop_ratio": (model_flops / hlo_flops_global
+                              if hlo_flops_global else None),
+        "step_time_bound_s": bound_s,
+        #: fraction of pure-compute roofline achieved if the step runs at
+        #: its dominant-term bound — the §Perf score being hill-climbed
+        "roofline_fraction": ideal_s / bound_s if bound_s else None,
+        "collectives": hlo.collectives,
+        "unknown_trip_whiles": hlo.unknown_trip_whiles,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             seq_shard: bool = True, remat: bool = True,
+             moment_dtype: str = "float32", accum: int = 1,
+             save_hlo_path: str = None) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "n_chips": n_chips,
+                           "seq_shard": seq_shard, "remat": remat,
+                           "moment_dtype": moment_dtype, "accum": accum}
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, mesh, seq_shard=seq_shard,
+                               remat=remat, moment_dtype=moment_dtype,
+                               accum=accum)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    print(ma)
+    if ma is not None:
+        per_dev = {"argument_bytes": int(ma.argument_size_in_bytes),
+                   "output_bytes": int(ma.output_size_in_bytes),
+                   "temp_bytes": int(ma.temp_size_in_bytes),
+                   "alias_bytes": int(ma.alias_size_in_bytes)}
+        live = (per_dev["argument_bytes"] + per_dev["temp_bytes"]
+                + per_dev["output_bytes"] - per_dev["alias_bytes"])
+        per_dev["live_bytes"] = live
+        per_dev["fits_hbm_16g"] = bool(live <= HBM_PER_CHIP)
+        # The CPU backend legalizes bf16 dot operands by materializing f32
+        # copies, roughly doubling activation temps vs the TPU target where
+        # the MXU consumes bf16 natively. Report a bf16-adjusted estimate
+        # (args unchanged, temps halved) alongside the raw number.
+        adj = (per_dev["argument_bytes"] + per_dev["temp_bytes"] // 2
+               + per_dev["output_bytes"] - per_dev["alias_bytes"])
+        per_dev["live_bytes_bf16adj"] = adj
+        per_dev["fits_hbm_16g_bf16adj"] = bool(adj <= HBM_PER_CHIP)
+        rec["memory_per_device"] = per_dev
+
+    ca = compiled.cost_analysis()
+    print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+    rec["xla_cost_analysis"] = {
+        "flops_per_device_one_iter": float(ca.get("flops", 0.0)),
+        "bytes_accessed_one_iter": float(ca.get("bytes accessed", 0.0)),
+    }
+
+    hlo_text = compiled.as_text()
+    rec["hlo_chars"] = len(hlo_text)
+    if save_hlo_path:
+        import gzip
+        with gzip.open(save_hlo_path, "wt") as f:
+            f.write(hlo_text)
+        rec["hlo_path"] = save_hlo_path
+    hlo = hlo_analysis.analyze_hlo(hlo_text)
+    rec["hlo"] = {"flops_per_device": hlo.flops,
+                  "hbm_bytes_per_device": hlo.hbm_bytes,
+                  "collective_bytes_per_device": hlo.collective_bytes}
+    rec["roofline"] = roofline_terms(hlo, n_chips, meta["cfg"], meta["shape"])
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _print_summary(rec: Dict[str, Any]) -> None:
+    r = rec.get("roofline", {})
+    mem = rec.get("memory_per_device", {})
+    print(f"[dryrun] {rec['arch']} x {rec['shape']} x {rec['mesh']}"
+          f" ({rec['n_chips']} chips):"
+          f" lower {rec.get('lower_s')}s compile {rec.get('compile_s')}s")
+    if mem:
+        print(f"  mem/device: args {mem['argument_bytes']/2**30:.2f} GiB,"
+              f" temps {mem['temp_bytes']/2**30:.2f} GiB,"
+              f" fits 16G HBM: {mem['fits_hbm_16g']}")
+    if r:
+        print(f"  roofline: compute {r['compute_s']*1e3:.3f} ms,"
+              f" memory {r['memory_s']*1e3:.3f} ms,"
+              f" collective {r['collective_s']*1e3:.3f} ms"
+              f" -> dominant: {r['dominant']}")
+        print(f"  useful-FLOP ratio {r['useful_flop_ratio']:.3f},"
+              f" roofline fraction {r['roofline_fraction']:.3f}")
+
+
+def _sweep(outdir: str, mesh_kinds, archs, shapes) -> int:
+    os.makedirs(outdir, exist_ok=True)
+    failures = 0
+    for mesh_kind in mesh_kinds:
+        for arch in archs:
+            for shape in shapes:
+                cfg = get(arch)
+                ok, reason = cell_runnable(cfg, SHAPES_BY_NAME[shape])
+                out = os.path.join(
+                    outdir, f"{mesh_kind}__{arch}__{shape}.json")
+                if not ok:
+                    json.dump({"arch": arch, "shape": shape,
+                               "mesh": mesh_kind, "skipped": reason},
+                              open(out, "w"), indent=1)
+                    print(f"[dryrun] SKIP {arch} x {shape}: {reason}")
+                    continue
+                if os.path.exists(out):
+                    prev = json.load(open(out))
+                    if prev.get("ok"):
+                        print(f"[dryrun] cached {arch} x {shape} x {mesh_kind}")
+                        continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--mesh", mesh_kind, "--out", out]
+                print(f"[dryrun] RUN {' '.join(cmd[3:])}", flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                if r.returncode != 0:
+                    failures += 1
+                    err = (r.stderr or "")[-3000:]
+                    json.dump({"arch": arch, "shape": shape,
+                               "mesh": mesh_kind, "ok": False, "error": err},
+                              open(out, "w"), indent=1)
+                    print(f"[dryrun] FAIL {arch} x {shape} x {mesh_kind}:\n"
+                          f"{err}", flush=True)
+                else:
+                    sys.stdout.write(r.stdout)
+                    sys.stdout.flush()
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default=None, help="write the cell JSON here")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run every runnable (arch x shape) cell")
+    ap.add_argument("--meshes", default="single,multi",
+                    help="sweep mesh kinds, comma-separated")
+    ap.add_argument("--archs", default=None,
+                    help="sweep subset, comma-separated")
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--moment-dtype", default=None,
+                    help="override Adam moment dtype (default: f32; "
+                    "llama4 train uses bf16 — see EXPERIMENTS.md)")
+    ap.add_argument("--accum", type=int, default=0,
+                    help="gradient-accumulation microbatches for train "
+                    "cells (0 = per-arch default)")
+    args = ap.parse_args()
+
+    if args.sweep:
+        archs = args.archs.split(",") if args.archs else list(ARCH_NAMES)
+        shapes = (args.shapes.split(",") if args.shapes
+                  else [s.name for s in SHAPES])
+        n_fail = _sweep(args.outdir, args.meshes.split(","), archs, shapes)
+        sys.exit(1 if n_fail else 0)
+
+    assert args.arch and args.shape, "--arch/--shape required (or --sweep)"
+    # default moment dtype: bf16 for the 400B MoE (fits one pod), f32 else
+    mdt = args.moment_dtype or (
+        "bfloat16" if args.arch == "llama4-maverick-400b-a17b" else "float32")
+    # per-arch default accumulation: wide/deep archs microbatch 4x, mid 2x
+    cfg = get(args.arch)
+    if args.accum:
+        accum = args.accum
+    elif cfg.d_model >= 8192 or cfg.n_experts >= 64:
+        accum = 4
+    elif cfg.d_model >= 2048:
+        accum = 2
+    else:
+        accum = 1
+    try:
+        hlo_path = (args.out.replace(".json", ".hlo.gz")
+                    if args.out else None)
+        rec = run_cell(args.arch, args.shape, args.mesh,
+                       seq_shard=not args.no_seq_shard,
+                       remat=not args.no_remat, moment_dtype=mdt,
+                       accum=accum, save_hlo_path=hlo_path)
+        rec["ok"] = True
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "ok": False, "error": traceback.format_exc()[-4000:]}
+        if args.out:
+            json.dump(rec, open(args.out, "w"), indent=1)
+        raise
+    _print_summary(rec)
+    if args.out:
+        json.dump(rec, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

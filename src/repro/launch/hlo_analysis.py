@@ -1,0 +1,385 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits every while body ONCE —
+a 48-layer model executed as ``lax.scan`` reports 1/48th of its real FLOPs,
+and collective ops are not costed at all. The roofline deliverable needs
+per-step totals, so we parse ``compiled.as_text()`` ourselves:
+
+  * every computation gets an execution **multiplier**: while bodies multiply
+    by the loop's ``backend_config known_trip_count`` (scan always has one);
+  * **FLOPs** are counted for ``dot``/``convolution`` ops in *every*
+    computation (including fusion bodies) times the multiplier;
+  * **HBM bytes** are counted at *fusion boundaries* only — operands +
+    results of top-level ops inside materializing computations (entry, while
+    bodies, call/conditional targets). Values inside a fusion live in
+    registers/VMEM, so fusion-boundary traffic is the natural HBM-traffic
+    model on TPU (the analogue of the paper's "which transfers actually hit
+    the slow path" accounting);
+  * **collective bytes** are operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops, derived from the
+    result shape and the replica-group size, times the multiplier.
+
+This is the Tier-B counterpart of the paper's overhead-aware model: an
+analytical latency decomposition taken from the *compiled artifact*, not
+from ideal-FLOPs arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# shapes
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shapes_in(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """All dtype[dims] shapes in a string (handles tuple shapes)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(s):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _num_elements(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+# ---------------------------------------------------------------------------
+# op / computation parsing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape_str: str          #: result shape (may be a tuple)
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op] = dataclasses.field(default_factory=dict)
+    order: List[str] = dataclasses.field(default_factory=list)
+    root: Optional[str] = None
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_REF_RES = {
+    "body": re.compile(r"body=%([\w.\-]+)"),
+    "condition": re.compile(r"condition=%([\w.\-]+)"),
+    "calls": re.compile(r"calls=%([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%([\w.\-]+)"),
+    "branches": re.compile(r"(?:true_computation|false_computation|"
+                           r"branch_computations=\{)%?([\w.\-]+)"),
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+#: ops that move no HBM bytes themselves
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "conditional", "call", "after-all", "add-dependency",
+             "partition-id", "replica-id", "domain", "opt-barrier"}
+
+
+def _split_op_rest(rest: str) -> Optional[Tuple[str, str, List[str], str]]:
+    """Split 'SHAPE opcode(args), attrs' -> (shape, opcode, operands, attrs).
+
+    Walks the line tracking bracket depth: the opcode call is the first
+    '(' at depth 0 whose preceding char is an identifier char (a tuple
+    *shape* paren is preceded by start-of-string or whitespace).
+    """
+    depth = 0
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            if (ch == "(" and depth == 0 and i > 0
+                    and (rest[i - 1].isalnum() or rest[i - 1] == "-")):
+                # found the opcode call; opcode = trailing identifier
+                j = i - 1
+                while j >= 0 and (rest[j].isalnum() or rest[j] == "-"):
+                    j -= 1
+                opcode = rest[j + 1:i]
+                shape_str = rest[:j + 1].strip()
+                # find matching close paren
+                d2, k = 1, i + 1
+                while k < len(rest) and d2:
+                    if rest[k] in "([{":
+                        d2 += 1
+                    elif rest[k] in ")]}":
+                        d2 -= 1
+                    k += 1
+                operands = _OPERAND_RE.findall(rest[i + 1:k - 1])
+                attrs = rest[k:]
+                return shape_str, opcode, operands, attrs
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+    return None
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(name=m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry = m.group(1)
+                continue
+        else:
+            if line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _OPLINE_RE.match(line)
+            if not m:
+                continue
+            name, rest = m.group(1), m.group(2)
+            split = _split_op_rest(rest)
+            if split is None:
+                continue
+            shape_str, opcode, operands, attrs = split
+            cur.ops[name] = Op(name=name, shape_str=shape_str, opcode=opcode,
+                               operands=operands, attrs=attrs)
+            cur.order.append(name)
+            if line.lstrip().startswith("ROOT"):
+                cur.root = name
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# execution multipliers
+# ---------------------------------------------------------------------------
+
+def _multipliers(comps: Dict[str, Computation]
+                 ) -> Tuple[Dict[str, float], Dict[str, bool], int]:
+    """(multiplier, materializing) per computation + #unknown-trip whiles."""
+    entry = comps.get("__entry__")
+    mult: Dict[str, float] = {}
+    mat: Dict[str, bool] = {}
+    unknown = 0
+    if entry is None:
+        return {c: 1.0 for c in comps}, {c: True for c in comps}, 0
+    stack = [(entry.name, 1.0, True)]
+    while stack:
+        cname, m, is_mat = stack.pop()
+        if cname not in comps:
+            continue
+        mult[cname] = mult.get(cname, 0.0) + m
+        mat[cname] = mat.get(cname, False) or is_mat
+        comp = comps[cname]
+        for op in comp.ops.values():
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.attrs)
+                trip = float(tm.group(1)) if tm else 1.0
+                if tm is None:
+                    unknown += 1
+                for key in ("body", "condition"):
+                    r = _REF_RES[key].search(op.attrs)
+                    if r:
+                        stack.append((r.group(1), m * trip, is_mat))
+            elif op.opcode in ("fusion",):
+                r = _REF_RES["calls"].search(op.attrs)
+                if r:
+                    stack.append((r.group(1), m, False))
+            elif op.opcode in ("call", "async-start", "custom-call"):
+                for key in ("to_apply", "calls"):
+                    r = _REF_RES[key].search(op.attrs)
+                    if r:
+                        stack.append((r.group(1), m, is_mat))
+            elif op.opcode == "conditional":
+                for r in _REF_RES["branches"].finditer(op.attrs):
+                    stack.append((r.group(1), m, is_mat))
+            # reduce/sort/map to_apply regions: scalar lambdas — ignored
+    return mult, mat, unknown
+
+
+# ---------------------------------------------------------------------------
+# per-op costing
+# ---------------------------------------------------------------------------
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res = _shapes_in(op.shape_str)
+    if not res:
+        return 0.0
+    out_elems = _num_elements(res[0][1])
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contract = 1
+    if m and op.operands:
+        lhs = comp.ops.get(op.operands[0])
+        if lhs is not None:
+            lshapes = _shapes_in(lhs.shape_str)
+            if lshapes:
+                ldims = lshapes[-1][1]
+                for d in (int(x) for x in m.group(1).split(",") if x):
+                    if d < len(ldims):
+                        contract *= ldims[d]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    res = _shapes_in(op.shape_str)
+    if not res or len(op.operands) < 2:
+        return 0.0
+    out_dims = res[0][1]
+    out_elems = _num_elements(out_dims)
+    rhs = comp.ops.get(op.operands[1])
+    if rhs is None:
+        return 2.0 * out_elems
+    rshapes = _shapes_in(rhs.shape_str)
+    kernel_elems = _num_elements(rshapes[0][1]) if rshapes else 1
+    # dim_labels ...->b..f : the output feature dim divides kernel work
+    feat = max(out_dims) if out_dims else 1
+    m = re.search(r"dim_labels=\S*->(\S+?)[,\s]", op.attrs + " ")
+    if m and out_dims:
+        lab = m.group(1)
+        fpos = lab.find("f")
+        if 0 <= fpos < len(out_dims):
+            feat = out_dims[fpos]
+    groups = 1
+    g = re.search(r"feature_group_count=(\d+)", op.attrs)
+    if g:
+        groups = int(g.group(1))
+    return 2.0 * out_elems * kernel_elems / max(1, feat) / max(1, groups) * \
+        (groups if groups > 1 else 1)
+
+
+def _group_size(op: Op) -> int:
+    m = _GROUPS_IOTA_RE.search(op.attrs)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(op.attrs)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def _collective_operand_bytes(op: Op) -> float:
+    """Operand bytes from the result shape + the op's semantics."""
+    kind = op.opcode.replace("-start", "")
+    shapes = _shapes_in(op.shape_str)
+    if not shapes:
+        return 0.0
+    # async -start ops return (operand, ..., result): use the LAST shape
+    result_bytes = (_num_elements(shapes[-1][1])
+                    * _DTYPE_BYTES[shapes[-1][0]])
+    gs = _group_size(op)
+    if kind == "all-gather":
+        return result_bytes / gs
+    if kind == "reduce-scatter":
+        return result_bytes * gs
+    return float(result_bytes)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    flops: float                       #: per-device, trip-count scaled
+    hbm_bytes: float                   #: fusion-boundary traffic, per-device
+    collective_bytes: float            #: operand bytes, per-device program
+    collectives: Dict[str, Dict[str, float]]   #: per kind: count / bytes
+    unknown_trip_whiles: int
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _is_inplace_update(op: Op, comps: Dict[str, "Computation"]) -> bool:
+    """dynamic-update-slice (bare or as a fusion root) aliases its big
+    operand on TPU: real HBM traffic is the updated slice, not the buffer."""
+    if op.opcode == "dynamic-update-slice":
+        return True
+    if op.opcode == "fusion":
+        r = _REF_RES["calls"].search(op.attrs)
+        if r:
+            callee = comps.get(r.group(1))
+            if callee is not None and callee.root is not None:
+                return callee.ops[callee.root].opcode == \
+                    "dynamic-update-slice"
+    return False
+
+
+def analyze_hlo(text: str) -> HLOAnalysis:
+    comps = parse_hlo(text)
+    mult, mat, unknown = _multipliers(comps)
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes = 0.0
+    coll: Dict[str, Dict[str, float]] = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        materializing = mat.get(cname, False)
+        for op in comp.ops.values():
+            kind = op.opcode.replace("-start", "")
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, comp)
+            elif op.opcode == "convolution":
+                flops += m * _conv_flops(op, comp)
+            if kind in COLLECTIVES and not op.opcode.endswith("-done"):
+                b = m * _collective_operand_bytes(op)
+                coll_bytes += b
+                slot = coll.setdefault(kind, {"count": 0.0, "bytes": 0.0})
+                slot["count"] += m
+                slot["bytes"] += b
+            if materializing and op.opcode not in _FREE_OPS \
+                    and not op.opcode.endswith("-done"):
+                opnd = [(_shape_bytes(comp.ops[o].shape_str))
+                        for o in op.operands if o in comp.ops]
+                if _is_inplace_update(op, comps):
+                    # in-place: write the slice (= all inputs but the
+                    # aliased buffer), read nothing buffer-sized
+                    b = sum(opnd) - (max(opnd) if opnd else 0)
+                else:
+                    b = _shape_bytes(op.shape_str) + sum(opnd)
+                hbm += m * b
+    return HLOAnalysis(flops=flops, hbm_bytes=hbm,
+                       collective_bytes=coll_bytes, collectives=coll,
+                       unknown_trip_whiles=unknown)

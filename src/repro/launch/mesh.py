@@ -1,0 +1,60 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state — required because the
+dry-run launcher must set XLA_FLAGS before any jax initialization.
+
+Mesh axes:
+  * ``pod``   — data parallelism across pods; gradients cross the inter-pod
+                link once per step (all-reduce), optionally int8-compressed.
+  * ``data``  — FSDP/batch sharding within a pod (16-way).
+  * ``model`` — tensor/expert/sequence parallelism within a pod (16-way).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _auto(n: int) -> Tuple:
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
+    """Generic mesh (tests, elastic re-meshing)."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(n: Optional[int] = None,
+                   axes: Tuple[str, ...] = ("data", "model"),
+                   ) -> jax.sharding.Mesh:
+    """Best-effort mesh over however many devices exist right now —
+    the elastic-scaling entry point: callers re-invoke after membership
+    changes and get a valid mesh for the survivors."""
+    n = n or jax.device_count()
+    if len(axes) == 2:
+        # squarest 2-D factorization
+        a = int(n ** 0.5)
+        while n % a:
+            a -= 1
+        return make_mesh((n // a, a), axes)
+    return make_mesh((n,), axes)
+
+
+def batch_sharding(mesh: jax.sharding.Mesh) -> jax.sharding.NamedSharding:
+    """Input batches shard over every data-like axis (pod + data)."""
+    P = jax.sharding.PartitionSpec
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return jax.sharding.NamedSharding(mesh, P(axes))

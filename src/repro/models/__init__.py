@@ -1,0 +1,16 @@
+"""Model zoo: composable pure-function models for the assigned architectures
+and the paper's jet-tagging model class."""
+from . import attention, blocks, encdec, moe, recurrent, transformer
+from .transformer import Transformer
+from .encdec import EncDec
+
+
+def build(cfg, *, remat: bool = False):
+    """Factory: ArchConfig -> model object (Transformer or EncDec)."""
+    if cfg.enc_layers > 0:
+        return EncDec(cfg, remat=remat)
+    return Transformer(cfg, remat=remat)
+
+
+__all__ = ["attention", "blocks", "encdec", "moe", "recurrent", "transformer",
+           "Transformer", "EncDec", "build"]

@@ -1,0 +1,466 @@
+"""Attention variants for the assigned architectures.
+
+One parameterized implementation covers: MHA/GQA (n_kv <= n_heads), optional
+QKV bias (qwen1.5), optional qk-norm (qwen3), sliding-window (mixtral) and
+local (recurrentgemma) masks, RoPE / M-RoPE, and KV-cache decode. MLA
+(minicpm3) is a separate path (latent KV compression changes the parameter
+structure).
+
+Shapes: x (B, S, d); q/k/v (B, S, H, hd); cache K/V (B, S_max, n_kv, hd).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import shardctx
+from . import blocks
+from .blocks import Params, apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None       #: sliding/local attention window
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl
+    causal: bool = True
+    use_rope: bool = True              #: False for learned-pos models (whisper)
+    #: "bfloat16" or "int8" — int8 halves KV-cache HBM again using the
+    #: paper's symmetric power-of-two scheme (write: scaled round+clip;
+    #: read: shift-dequant). Required to fit qwen1.5's 10.9 TB MHA cache.
+    cache_dtype: str = "bfloat16"
+
+
+#: power-of-two KV quantization scale 2^e (paper §4.3.2 scheme): post-norm
+#: k/v values sit in ~N(0, 1), so e = -3 spans ±15.9 at int8 resolution.
+KV_SCALE_EXP = -3
+
+
+def _cache_store(x: jax.Array, dtype) -> jax.Array:
+    if dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * 2.0 ** -KV_SCALE_EXP),
+                        -128, 127).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def _cache_load(x: jax.Array) -> jax.Array:
+    if x.dtype == jnp.int8:
+        return (x.astype(jnp.bfloat16) * jnp.bfloat16(2.0 ** KV_SCALE_EXP))
+    return x
+
+
+def attn_init(key, cfg: AttnConfig) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, d, cfg.n_kv * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, d, cfg.n_kv * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(hd)
+        p["knorm"] = rmsnorm_init(hd)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg: AttnConfig, positions: jax.Array):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    if cfg.mrope_sections is not None and positions.ndim == 2:
+        # text-only M-RoPE: all three position streams coincide
+        positions = jnp.stack([positions] * 3, axis=-1)
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv, hd)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q)
+        k = rmsnorm(p["knorm"], k)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, theta=cfg.rope_theta,
+                       mrope_sections=cfg.mrope_sections)
+        k = apply_rope(k, positions, theta=cfg.rope_theta,
+                       mrope_sections=cfg.mrope_sections)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int) -> jax.Array:
+    """Grouped scaled-dot-product attention. q (B,S,H,hd), k/v (B,T,kv,hd),
+    mask (S, T) or (B, S, T) additive."""
+    B, S, H, hd = q.shape
+    kv = k.shape[2]
+    q = q.reshape(B, S, kv, n_rep, hd)
+    logits = jnp.einsum("bsgrd,btgd->bgrst", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(hd)
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        logits = logits + m[:, None, None, :, :]
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrst,btgd->bsgrd", w, v)
+    return out.reshape(B, S, H * hd)
+
+
+def _causal_mask(S: int, T: int, window: Optional[int]) -> jax.Array:
+    """Additive (S, T) mask; queries at absolute positions T-S..T-1."""
+    qpos = jnp.arange(S)[:, None] + (T - S)
+    kpos = jnp.arange(T)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+#: Above this sequence length the dense (S x S) score matrix is replaced by
+#: a scan over query chunks — flash-attention scheduling at the XLA level.
+#: 4096 keeps train_4k on the dense path: with heads TP-sharded the dense
+#: score tensor fits, and the chunk scan's backward costs extra resharding
+#: collectives (measured: EXPERIMENTS.md §Perf, qwen3 iteration 2).
+DENSE_ATTN_MAX_SEQ = 4096
+
+
+def _auto_q_chunk(S: int) -> int:
+    """Query-chunk size for the flash path. Tiles materialize at XLA fusion
+    boundaries, so total score traffic is ~O(S*T) regardless of chunking —
+    bigger tiles minimize the per-tile aux traffic (masks, running stats)
+    while the online softmax keeps PEAK memory at one (Cq x Ck) tile."""
+    c = 512
+    while S % c:
+        c //= 2
+    return max(c, 1)
+
+
+def _sdpa_q_chunked(q, k, v, window: Optional[int], n_rep: int,
+                    q_chunk: int, kv_chunk: int = 2048) -> jax.Array:
+    """Flash attention at the XLA level: nested scans over query and kv
+    chunks with online-softmax statistics carried across kv steps. Only a
+    (Cq x Ck) score TILE is ever live — HBM traffic per layer drops from
+    O(S*T) score materialization to O(q + k + v + o) streaming (measured
+    ~10x on the prefill_32k memory term, EXPERIMENTS.md §4). This is the
+    same schedule the ``kernels/flash_attn`` Pallas kernel runs at the VMEM
+    tile level — and the cascade-FIFO-carrying-partials idea at heart.
+    """
+    B, S, H, hd = q.shape
+    T, kvh = k.shape[1], k.shape[2]
+    while T % kv_chunk:
+        kv_chunk //= 2
+    nq, nk = S // q_chunk, T // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+    qc = jnp.moveaxis(
+        q.reshape(B, nq, q_chunk, kvh, n_rep, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, kv_chunk, kvh, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, kv_chunk, kvh, hd), 1, 0)
+    # NOTE (EXPERIMENTS.md §4.3 iter 3): pinning a kv-group-sharded layout
+    # through the scans (constrain_axes on qc/kc/vc + carries) cuts the
+    # collective term 5.5x but idles tp-kv/16 of the axis on the score
+    # tiles, inflating the dominant memory term ~20-50% — net-negative on
+    # the roofline fraction for GQA (kv=8 < tp=16). Left unpinned.
+
+    def q_body(carry, inp):
+        i, qi = inp                                   # qi (B,Cq,g,r,hd)
+        qpos = i * q_chunk + jnp.arange(q_chunk)[:, None]
+
+        def kv_body(st, kv_inp):
+            j, kj, vj = kv_inp                        # kj/vj (B,Ck,g,hd)
+            m, l, acc = st
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            ok = kpos <= qpos
+            if window is not None:
+                ok &= kpos > qpos - window
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+            # masked tiles: exp(s - m2) would be exp(0) on all-NEG_INF rows
+            p = jnp.where(ok[None, None, None],
+                          jnp.exp(s - m2[..., None]), 0.0)
+            corr = jnp.exp(m - m2)
+            l2 = corr * l + jnp.sum(p, axis=-1)
+            acc2 = (acc * corr[..., None]
+                    + jnp.einsum("bgrqk,bkgd->bgrqd", p,
+                                 vj.astype(jnp.float32)))
+            return (m2, l2, acc2), None
+
+        stat_shape = (B, kvh, n_rep, q_chunk)
+        init = (jnp.full(stat_shape, NEG_INF, jnp.float32),
+                jnp.zeros(stat_shape, jnp.float32),
+                jnp.zeros((*stat_shape, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_body, init,
+                                      (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,g,r,Cq,hd)
+        out = out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+        return carry, out.reshape(B, q_chunk, H * hd)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H * hd)
+
+
+def attention(p: Params, x: jax.Array, cfg: AttnConfig,
+              positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence (training/prefill) attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = _qkv(p, x, cfg, positions)
+    n_rep = cfg.n_heads // cfg.n_kv
+    if cfg.causal and S > DENSE_ATTN_MAX_SEQ:
+        # long prefill: memory-bounded q-chunk scan; heads TP-sharded
+        q = shardctx.constrain_heads(q)
+        k = shardctx.constrain_heads(k)
+        v = shardctx.constrain_heads(v)
+        out = _sdpa_q_chunked(q, k, v, cfg.window, n_rep, _auto_q_chunk(S))
+    else:
+        # dense path: sequence-parallel attention (scores q-seq-sharded)
+        q = shardctx.constrain_seq_q(q)
+        k = shardctx.constrain_replicated_kv(k)
+        v = shardctx.constrain_replicated_kv(v)
+        mask = (_causal_mask(S, S, cfg.window) if cfg.causal else None)
+        out = _sdpa(q, k, v, mask, n_rep)
+    return dense(p["wo"], out)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S_max, n_kv, hd)
+    v: jax.Array
+    length: jax.Array  # scalar int32 — tokens currently valid
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int,
+               dtype=None) -> KVCache:
+    if dtype is None:
+        dtype = jnp.int8 if cfg.cache_dtype == "int8" else jnp.bfloat16
+    shape = (batch, max_len, cfg.n_kv, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(p: Params, x: jax.Array, cache: KVCache, cfg: AttnConfig,
+                ) -> Tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, d). For sliding-window configs the cache
+    is a ring buffer of size window (positions wrap), so a 500k-token
+    context costs O(window) memory — mixtral/recurrentgemma long-context.
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    T = cache.k.shape[1]
+    pos = jnp.broadcast_to(cache.length[None, None], (B, 1))
+    q, k, v = _qkv(p, x, cfg, pos)
+    slot = (cache.length % T) if cfg.window is not None else cache.length
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, _cache_store(k, cache.k.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, _cache_store(v, cache.v.dtype), slot, axis=1)
+    kpos = jnp.arange(T)
+    if cfg.window is not None:
+        # ring buffer: valid entries are the last min(len+1, T) writes
+        age = (slot - kpos) % T
+        valid = age < jnp.minimum(cache.length + 1, T)
+    else:
+        valid = kpos <= cache.length
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, :]     # (1,1,T)
+    out = _sdpa(q, _cache_load(ck), _cache_load(cv),
+                jnp.broadcast_to(mask, (B, 1, T)),
+                cfg.n_heads // cfg.n_kv)
+    y = dense(p["wo"], out)
+    return y, KVCache(k=ck, v=cv, length=cache.length + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64      #: per-head non-positional dim
+    qk_rope_dim: int = 32      #: per-head decoupled-RoPE dim
+    v_head_dim: int = 64
+    rope_theta: float = 10000.0
+
+
+def mla_init(key, cfg: MLAConfig) -> Params:
+    ks = jax.random.split(key, 7)
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": dense_init(ks[0], cfg.d_model, cfg.q_lora_rank),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank),
+        "wq_b": dense_init(ks[1], cfg.q_lora_rank, H * qk),
+        "wkv_a": dense_init(ks[2], cfg.d_model,
+                            cfg.kv_lora_rank + cfg.qk_rope_dim),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank),
+        "wkv_b": dense_init(ks[3], cfg.kv_lora_rank,
+                            H * (cfg.qk_nope_dim + cfg.v_head_dim)),
+        "wo": dense_init(ks[4], H * cfg.v_head_dim, cfg.d_model),
+    }
+
+
+def mla_attention(p: Params, x: jax.Array, cfg: MLAConfig,
+                  positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence MLA. The KV latent c_kv (rank kv_lora_rank) plus a
+    shared rope key is all that decode needs to cache — the paper-assigned
+    MiniCPM3's memory saving."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    q = q.reshape(B, S, H, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+
+    kv_a = dense(p["wkv_a"], x)
+    c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        theta=cfg.rope_theta)                  # (B,S,1,r)
+    kv = dense(p["wkv_b"], rmsnorm(p["kv_norm"], c_kv))
+    kv = kv.reshape(B, S, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    if S > DENSE_ATTN_MAX_SEQ:
+        q_nope = shardctx.constrain_heads(q_nope)
+        q_rope = shardctx.constrain_heads(q_rope)
+        k_nope = shardctx.constrain_heads(k_nope)
+        v = shardctx.constrain_heads(v)
+    else:
+        q_nope = shardctx.constrain_seq_q(q_nope)
+        q_rope = shardctx.constrain_seq_q(q_rope)
+        k_nope = shardctx.constrain_replicated_kv(k_nope)
+        v = shardctx.constrain_replicated_kv(v)
+
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    kr = jnp.broadcast_to(k_rope, (B, S, 1, cfg.qk_rope_dim))
+
+    def _mla_sdpa(qn, qr, mask):
+        logits = (jnp.einsum("bshd,bthd->bhst", qn, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshd,btxd->bhst", qr, kr,
+                               preferred_element_type=jnp.float32)) * scale
+        logits = logits + mask[None, None]
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhst,bthd->bshd", w, v)
+
+    if S > DENSE_ATTN_MAX_SEQ:
+        # flash schedule (see _sdpa_q_chunked): nested q x kv chunk scans,
+        # online softmax; the two-part MLA score (nope + decoupled rope)
+        # is formed per tile
+        q_chunk, kv_chunk = _auto_q_chunk(S), 2048
+        while S % kv_chunk:
+            kv_chunk //= 2
+        nq, nk = S // q_chunk, S // kv_chunk
+        vd = v.shape[-1]
+        qn_c = jnp.moveaxis(q_nope.reshape(B, nq, q_chunk, H, -1), 1, 0)
+        qr_c = jnp.moveaxis(q_rope.reshape(B, nq, q_chunk, H, -1), 1, 0)
+        kn_c = jnp.moveaxis(k_nope.reshape(B, nk, kv_chunk, H, -1), 1, 0)
+        kr_c = jnp.moveaxis(kr.reshape(B, nk, kv_chunk, 1, -1), 1, 0)
+        v_c = jnp.moveaxis(v.reshape(B, nk, kv_chunk, H, vd), 1, 0)
+
+        def q_body(carry, inp):
+            i, qn_i, qr_i = inp
+            qpos = i * q_chunk + jnp.arange(q_chunk)[:, None]
+
+            def kv_body(st, kv_inp):
+                j, knj, krj, vj = kv_inp
+                m, l, acc = st
+                s = (jnp.einsum("bqhd,bkhd->bhqk", qn_i, knj,
+                                preferred_element_type=jnp.float32)
+                     + jnp.einsum("bqhd,bkxd->bhqk", qr_i, krj,
+                                  preferred_element_type=jnp.float32)
+                     ) * scale
+                kpos = j * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                ok = kpos <= qpos
+                s = jnp.where(ok[None, None], s, NEG_INF)
+                m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.where(ok[None, None],
+                              jnp.exp(s - m2[..., None]), 0.0)
+                corr = jnp.exp(m - m2)
+                l2 = corr * l + jnp.sum(p, axis=-1)
+                acc2 = (acc * corr[..., None]
+                        + jnp.einsum("bhqk,bkhd->bhqd", p,
+                                     vj.astype(jnp.float32)))
+                return (m2, l2, acc2), None
+
+            init = (jnp.full((B, H, q_chunk), NEG_INF, jnp.float32),
+                    jnp.zeros((B, H, q_chunk), jnp.float32),
+                    jnp.zeros((B, H, q_chunk, vd), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(
+                kv_body, init, (jnp.arange(nk), kn_c, kr_c, v_c))
+            o = acc / jnp.maximum(l, 1e-30)[..., None]
+            o = o.transpose(0, 2, 1, 3).astype(x.dtype)     # (B,Cq,H,vd)
+            return carry, o.reshape(B, q_chunk, H * vd)
+
+        _, outs = jax.lax.scan(q_body, None,
+                               (jnp.arange(nq), qn_c, qr_c))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, -1)
+    else:
+        out = _mla_sdpa(q_nope, q_rope, _causal_mask(S, S, None)
+                        ).reshape(B, S, -1)
+    return dense(p["wo"], out)
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array     # (B, S_max, kv_lora_rank)
+    k_rope: jax.Array   # (B, S_max, qk_rope_dim)
+    length: jax.Array
+
+
+def mla_init_cache(cfg: MLAConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mla_decode_step(p: Params, x: jax.Array, cache: MLACache, cfg: MLAConfig,
+                    ) -> Tuple[jax.Array, MLACache]:
+    """One-token MLA decode from the latent cache (the whole point of MLA:
+    cache is rank-r latents, not per-head K/V)."""
+    B, S, _ = x.shape
+    assert S == 1
+    H = cfg.n_heads
+    pos = jnp.broadcast_to(cache.length[None, None], (B, 1))
+    q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    q = q.reshape(B, 1, H, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, theta=cfg.rope_theta)
+
+    kv_a = dense(p["wkv_a"], x)
+    c_kv_new, k_rope_new = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos,
+                            theta=cfg.rope_theta)[:, :, 0, :]
+    c = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_kv_new.astype(cache.c_kv.dtype), cache.length, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope_new.astype(cache.k_rope.dtype), cache.length,
+        axis=1)
+
+    kv = dense(p["wkv_b"], rmsnorm(p["kv_norm"], c))
+    T = c.shape[1]
+    kv = kv.reshape(B, T, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    logits = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope[:, :, :, :], kr,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(T) <= cache.length
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v).reshape(B, 1, -1)
+    return dense(p["wo"], out), MLACache(c_kv=c, k_rope=kr,
+                                         length=cache.length + 1)

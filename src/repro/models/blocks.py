@@ -1,0 +1,148 @@
+"""Common model blocks: norms, MLPs, embeddings — pure functions + init.
+
+Conventions used across the model zoo:
+  * params are nested dicts of jnp arrays (pytrees);
+  * every forward is a pure function ``f(params, x, cfg)``;
+  * layers destined for ``jax.lax.scan`` stack their params on axis 0;
+  * computation dtype is bf16 with f32 accumulation for norms/softmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32) -> Params:
+    p = {"w": _init(key, (d_in, d_out), dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wg": _init(k1, (d, d_ff), dtype=dtype),
+            "wu": _init(k2, (d, d_ff), dtype=dtype),
+            "wd": _init(k3, (d_ff, d), dtype=dtype)}
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["wg"].astype(x.dtype))
+    u = x @ p["wu"].astype(x.dtype)
+    return (g * u) @ p["wd"].astype(x.dtype)
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"wi": _init(k1, (d, d_ff), dtype=dtype),
+            "wo": _init(k2, (d_ff, d), dtype=dtype),
+            "bi": jnp.zeros((d_ff,), dtype), "bo": jnp.zeros((d,), dtype)}
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["wi"].astype(x.dtype) + p["bi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype) + p["bo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"emb": _init(key, (vocab, d), scale=1.0, dtype=dtype)}
+
+
+def embed(p: Params, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return p["emb"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied LM head: logits in f32 for a stable softmax/loss."""
+    return (x @ p["emb"].astype(x.dtype).T).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE sections for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               theta: float = 10000.0,
+               mrope_sections: Optional[Tuple[int, ...]] = None) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, D); positions: (B, S) or (B, S, 3)
+    for M-RoPE (temporal/height/width sections, Qwen2-VL §2).
+    """
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                       # (D/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    else:
+        # split the D/2 frequency channels into 3 position streams
+        assert positions.ndim == 3 and positions.shape[-1] == 3
+        secs = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            f = freqs[start:start + sec]
+            secs.append(positions[..., i:i + 1].astype(jnp.float32) * f)
+            start += sec
+        ang = jnp.concatenate(secs, axis=-1)           # (B,S,D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

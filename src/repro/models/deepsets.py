@@ -1,0 +1,75 @@
+"""Float DeepSets for jet tagging (paper Table 3 Deepsets-* workloads).
+
+phi MLP applied per particle -> permutation-invariant aggregation over the
+set dimension (mean/sum) -> rho MLP -> class logits. Mirrors the paper's
+supported model class; ``to_quantized`` yields the (phi, rho) QuantizedMLP
+pair consumed by the fused ``kernels/cascade_mlp.deepsets`` Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import QuantizedMLP, quantize_mlp
+from .mlp import Params, mlp_init, mlp_forward
+
+
+def deepsets_init(key, in_features: int, phi_nodes: Sequence[int],
+                  rho_nodes: Sequence[int]) -> Dict[str, List[Params]]:
+    k1, k2 = jax.random.split(key)
+    return {"phi": mlp_init(k1, in_features, list(phi_nodes)),
+            "rho": mlp_init(k2, phi_nodes[-1], list(rho_nodes))}
+
+
+def deepsets_forward(params: Dict[str, List[Params]], x: jax.Array,
+                     *, agg: str = "mean") -> jax.Array:
+    """x (B, M, F) or (M, F) -> logits (B, C) or (C,)."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    # phi runs per particle, with ReLU after every layer (the aggregation
+    # consumes post-activation features, matching the paper's pipeline)
+    h = mlp_forward(params["phi"], x, relu_last=True)
+    g = jnp.mean(h, axis=1) if agg == "mean" else jnp.sum(h, axis=1)
+    out = mlp_forward(params["rho"], g)
+    return out[0] if squeeze else out
+
+
+def deepsets_loss(params, x: jax.Array, labels: jax.Array,
+                  *, agg: str = "mean") -> jax.Array:
+    logits = deepsets_forward(params, x, agg=agg)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def to_quantized(params, sample_input: np.ndarray, *, agg: str = "mean",
+                 ) -> Tuple[QuantizedMLP, QuantizedMLP]:
+    """PTQ both stages. The rho calibration input is the aggregated phi
+    output over the calibration set — scales match deployment exactly.
+
+    NOTE on mean semantics: the fused kernel reduces over the *padded*
+    power-of-two set size with a bit-shift (paper §4.3.1); calibration here
+    uses the same padded divisor so integer outputs agree bit-for-bit.
+    """
+    x = np.asarray(sample_input)
+    if x.ndim == 2:
+        x = x[None]
+    B, M, F = x.shape
+    Mp = 1 << (M - 1).bit_length()
+
+    phi_w = [np.asarray(p["w"]) for p in params["phi"]]
+    phi_b = [np.asarray(p["b"]) for p in params["phi"]]
+    phi_relu = [True] * len(phi_w)
+    qphi = quantize_mlp(phi_w, phi_b, phi_relu, x.reshape(-1, F))
+
+    h = np.asarray(mlp_forward(params["phi"], jnp.asarray(x),
+                               relu_last=True))
+    g = h.sum(axis=1) / Mp if agg == "mean" else h.sum(axis=1)
+    rho_w = [np.asarray(p["w"]) for p in params["rho"]]
+    rho_b = [np.asarray(p["b"]) for p in params["rho"]]
+    rho_relu = [i < len(rho_w) - 1 for i in range(len(rho_w))]
+    qrho = quantize_mlp(rho_w, rho_b, rho_relu, g)
+    return qphi, qrho

@@ -1,0 +1,171 @@
+"""Whisper-style encoder-decoder backbone (conv/audio frontend stubbed).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, d_model) where the conv1d
+stack would produce them. The transformer backbone is faithful: bidirectional
+encoder (post-LN-free pre-norm, GeLU MLP), causal decoder with cross
+attention, learned positional embeddings, tied unembedding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import shardctx
+from . import attention as A
+from . import blocks as B
+
+Params = Dict[str, Any]
+
+
+def _acfg(cfg: ArchConfig, causal: bool) -> A.AttnConfig:
+    # Whisper uses learned positional embeddings, not RoPE.
+    return A.AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                        n_kv=cfg.n_kv, head_dim=cfg.hd, causal=causal,
+                        rope_theta=cfg.rope_theta, use_rope=False)
+
+
+class EncDec:
+    def __init__(self, cfg: ArchConfig, *, remat: bool = False):
+        assert cfg.enc_layers > 0
+        self.cfg = cfg
+        self.remat = remat
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": B.layernorm_init(cfg.d_model),
+                    "attn": A.attn_init(k1, _acfg(cfg, causal=False)),
+                    "ln2": B.layernorm_init(cfg.d_model),
+                    "mlp": B.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff)}
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": B.layernorm_init(cfg.d_model),
+                    "self": A.attn_init(k1, _acfg(cfg, causal=True)),
+                    "ln2": B.layernorm_init(cfg.d_model),
+                    "cross": A.attn_init(k2, _acfg(cfg, causal=False)),
+                    "ln3": B.layernorm_init(cfg.d_model),
+                    "mlp": B.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff)}
+
+        return {
+            "embedding": B.embedding_init(ks[0], cfg.vocab, cfg.d_model),
+            # learned positions sized for the assigned 32k decode/prefill
+            # cells (whisper itself uses 448; see DESIGN.md §4)
+            "dec_pos": B._init(ks[1], (32768, cfg.d_model), scale=0.01),
+            "enc": jax.vmap(enc_layer)(jax.random.split(ks[2], cfg.enc_layers)),
+            "dec": jax.vmap(dec_layer)(jax.random.split(ks[3], cfg.n_layers)),
+            "enc_norm": B.layernorm_init(cfg.d_model),
+            "dec_norm": B.layernorm_init(cfg.d_model),
+        }
+
+    # -- encoder --------------------------------------------------------------
+    def encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        """frames: (B, S_enc, d) stub embeddings -> encoder states."""
+        cfg = self.cfg
+
+        def layer(x, p):
+            x = x + A.attention(p["attn"], B.layernorm(p["ln1"], x),
+                                _acfg(cfg, causal=False))
+            x = x + B.gelu_mlp(p["mlp"], B.layernorm(p["ln2"], x))
+            return x, None
+
+        fn = jax.checkpoint(lambda x, p: layer(x, p)) if self.remat else layer
+        x, _ = jax.lax.scan(fn, frames, params["enc"])
+        return B.layernorm(params["enc_norm"], x)
+
+    # -- decoder full-sequence (train / scoring) --------------------------------
+    def forward(self, params: Params, tokens: jax.Array, frames: jax.Array,
+                ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+        x = B.embed(params["embedding"], tokens)
+        S = x.shape[1]
+        x = x + params["dec_pos"][:S].astype(x.dtype)[None]
+
+        def layer(x, p):
+            x = x + A.attention(p["self"], B.layernorm(p["ln1"], x),
+                                _acfg(cfg, causal=True))
+            # cross attention: K/V from encoder states
+            h = B.layernorm(p["ln2"], x)
+            xa = _cross_attention(p["cross"], h, enc, cfg)
+            x = x + xa
+            x = x + B.gelu_mlp(p["mlp"], B.layernorm(p["ln3"], x))
+            return x, None
+
+        fn = jax.checkpoint(lambda x, p: layer(x, p)) if self.remat else layer
+        x, _ = jax.lax.scan(fn, x, params["dec"])
+        x = B.layernorm(params["dec_norm"], x)
+        return B.unembed(params["embedding"], x), jnp.zeros((), jnp.float32)
+
+    # -- decode -----------------------------------------------------------------
+    def init_cache(self, params: Params, frames: jax.Array, max_len: int):
+        """Prefill the cross-attention K/V from the encoder; empty self cache."""
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+        Bsz = frames.shape[0]
+
+        def one(p):
+            acfg = _acfg(cfg, causal=False)
+            k = B.dense(p["cross"]["wk"], enc).reshape(
+                Bsz, -1, cfg.n_kv, cfg.hd)
+            v = B.dense(p["cross"]["wv"], enc).reshape(
+                Bsz, -1, cfg.n_kv, cfg.hd)
+            return {"xk": k, "xv": v,
+                    "self": A.init_cache(_acfg(cfg, True), Bsz, max_len)}
+
+        caches = jax.vmap(one)(params["dec"])
+        return {"dec": caches, "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(self, params: Params, token: jax.Array, cache,
+                    ) -> Tuple[jax.Array, Any]:
+        cfg = self.cfg
+        x = B.embed(params["embedding"], token)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], cache["pos"], 1, axis=0).astype(x.dtype)[None, 0]
+
+        def body(x, inp):
+            p, c = inp
+            h, sc = A.decode_step(p["self"], B.layernorm(p["ln1"], x),
+                                  c["self"], _acfg(cfg, True))
+            x = x + h
+            hq = B.layernorm(p["ln2"], x)
+            x = x + _cross_attention_cached(p["cross"], hq, c["xk"], c["xv"],
+                                            cfg)
+            x = x + B.gelu_mlp(p["mlp"], B.layernorm(p["ln3"], x))
+            return x, {"xk": c["xk"], "xv": c["xv"], "self": sc}
+
+        x, new_dec = jax.lax.scan(body, x, (params["dec"], cache["dec"]))
+        x = B.layernorm(params["dec_norm"], x)
+        return (B.unembed(params["embedding"], x),
+                {"dec": new_dec, "pos": cache["pos"] + 1})
+
+
+def _cross_attention(p, q_in: jax.Array, enc: jax.Array,
+                     cfg: ArchConfig) -> jax.Array:
+    Bsz, S, _ = q_in.shape
+    hd = cfg.hd
+    q = B.dense(p["wq"], q_in).reshape(Bsz, S, cfg.n_heads, hd)
+    k = B.dense(p["wk"], enc).reshape(Bsz, -1, cfg.n_kv, hd)
+    v = B.dense(p["wv"], enc).reshape(Bsz, -1, cfg.n_kv, hd)
+    # sequence-parallel cross attention (same rule as self-attention):
+    # scores shard on the decoder-seq dim, encoder K/V replicate
+    q = shardctx.constrain_seq_q(q)
+    k = shardctx.constrain_replicated_kv(k)
+    v = shardctx.constrain_replicated_kv(v)
+    out = A._sdpa(q, k, v, None, cfg.n_heads // cfg.n_kv)
+    return B.dense(p["wo"], out)
+
+
+def _cross_attention_cached(p, q_in: jax.Array, k: jax.Array, v: jax.Array,
+                            cfg: ArchConfig) -> jax.Array:
+    Bsz, S, _ = q_in.shape
+    q = B.dense(p["wq"], q_in).reshape(Bsz, S, cfg.n_heads, cfg.hd)
+    out = A._sdpa(q, k, v, None, cfg.n_heads // cfg.n_kv)
+    return B.dense(p["wo"], out)

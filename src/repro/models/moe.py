@@ -1,0 +1,124 @@
+"""Mixture-of-Experts layer (token-choice top-1 / top-2) with EP-friendly
+GShard-style grouped dispatch.
+
+Tokens are grouped along the batch dimension (the group dim shards over the
+``data`` mesh axes; the expert dim of the stacked weights shards over
+``model`` = expert parallelism). Dispatch/combine are one-hot einsums of
+shape (G, S, E, C) — per-device slices stay small because G is sharded.
+
+Used by llama4-maverick (128 experts, top-1, shared expert) and mixtral-8x7b
+(8 experts, top-2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import Params, _init, swiglu_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int = 1
+    capacity_factor: float = 1.25
+    shared_expert: bool = False      #: llama4-style always-on expert
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    keys = jax.random.split(ke, 3)
+    p = {
+        "router": _init(kr, (d, E), dtype=jnp.float32),   # router in f32
+        "wg": _init(keys[0], (E, d, f), dtype=dtype),
+        "wu": _init(keys[1], (E, d, f), dtype=dtype),
+        "wd": _init(keys[2], (E, f, d), dtype=dtype),
+    }
+    if cfg.shared_expert:
+        p["shared"] = swiglu_init(ks, d, f, dtype=dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            / cfg.n_experts) + 1
+    return max(c, 1)
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: MoEConfig,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (G, S, d) -> (out (G, S, d), aux load-balance loss scalar).
+
+    Grouped GShard dispatch: top-k assignment, capacity-truncated positions
+    via cumulative sums, dispatch/combine one-hot einsums, stacked-expert
+    SwiGLU. Over-capacity tokens are dropped (contribute zero), the standard
+    trade for static shapes on TPU.
+    """
+    from repro.distributed import shardctx
+    G0, S0, d = x.shape
+    # Under sequence parallelism, make every seq shard its own dispatch
+    # group (zero-comm relabeling; device-local capacity — GShard groups
+    # are device-local by construction). See shardctx.moe_group_split.
+    split = shardctx.moe_group_split(S0)
+    if split > 1:
+        x = x.reshape(G0 * split, S0 // split, d)
+    G, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(S, cfg)
+
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,S,E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (G,S,K)
+    # renormalize the selected gates (mixtral convention)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- positions: flatten the K choices into the token axis so capacity
+    # is respected jointly across choices (choice-major: k-th choices of all
+    # tokens queue after (k-1)-th — GShard's priority ordering).
+    assign = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)  # (G,S,K,E)
+    assign_flat = assign.transpose(0, 2, 1, 3).reshape(G, K * S, E)
+    pos_flat = (jnp.cumsum(assign_flat, axis=1) - assign_flat)  # (G,KS,E)
+    keep_flat = (pos_flat < C) * assign_flat
+    pos = pos_flat.reshape(G, K, S, E).transpose(0, 2, 1, 3)   # (G,S,K,E)
+    keep = keep_flat.reshape(G, K, S, E).transpose(0, 2, 1, 3)
+
+    # dispatch: (G,S,E,C) summed over choices; combine carries the gate.
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32)         # (G,S,K,E,C)
+    dispatch = jnp.einsum("gske,gskec->gsec", keep, pos_oh)
+    combine = jnp.einsum("gsk,gske,gskec->gsec", gate_vals, keep, pos_oh)
+
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), x)
+    # Routing layout (EXPERIMENTS.md §4.2): E >= tp pins tokens to the
+    # expert sharding (EP all-to-all; weights stay put — without it GSPMD
+    # gathered the full 32 GiB llama4 expert stack). E < tp shards the
+    # device-local group dim instead (pure token-parallel expert compute;
+    # weights FSDP-stream) — E can't cover the axis.
+    if E % max(1, shardctx.tp_size()) == 0:
+        constrain = lambda t: shardctx.constrain_experts(t, 0)
+    else:
+        constrain = shardctx.constrain_moe_tokens
+    xin = constrain(xin)
+    h = (jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin,
+                                p["wg"].astype(x.dtype)))
+         * jnp.einsum("egcd,edf->egcf", xin, p["wu"].astype(x.dtype)))
+    eout = jnp.einsum("egcf,efd->egcd", h, p["wd"].astype(x.dtype))
+    eout = constrain(eout)
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), eout)
+
+    if cfg.shared_expert:
+        from .blocks import swiglu
+        out = out + swiglu(p["shared"], x)
+    if split > 1:
+        out = out.reshape(G0, S0, d)
+
+    # load-balance aux loss (Switch/GShard): E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(assign, axis=2), axis=(0, 1))       # fraction routed
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(f_e * p_e)
+    return out, aux

@@ -1,0 +1,328 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM+sLSTM).
+
+All three support two execution forms:
+  * sequence form for train/prefill — RG-LRU uses an **associative scan**
+    (elementwise linear recurrence, SP/parallel-friendly); mLSTM uses the
+    **chunkwise recurrent** form (parallel within chunks, scan across);
+    sLSTM is inherently sequential (hidden-state feedback into the gates)
+    and uses ``lax.scan`` over time;
+  * single-step form for decode — O(1) state per token, which is what makes
+    the ``long_500k`` 524k-context decode shape runnable for these archs.
+
+Simplifications vs. the papers (documented in DESIGN.md): mLSTM uses sigmoid
+input/forget gates with a max-normalizer instead of exponential gating with
+the m_t stabilizer; conv1d in the RG-LRU block is depthwise width-4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import Params, _init, dense, dense_init, rmsnorm, rmsnorm_init
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: Optional[int] = None       #: recurrence width (default d_model)
+    conv_width: int = 4
+
+    @property
+    def width(self) -> int:
+        return self.d_rnn or self.d_model
+
+
+def rglru_init(key, cfg: RGLRUConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    d, w = cfg.d_model, cfg.width
+    return {
+        "wx": dense_init(ks[0], d, w),          # recurrent branch in-proj
+        "wy": dense_init(ks[1], d, w),          # gate branch in-proj
+        "conv": _init(ks[2], (cfg.conv_width, w), scale=0.3),
+        "wa": dense_init(ks[3], w, w),          # recurrence gate
+        "wi": dense_init(ks[4], w, w),          # input gate
+        "lam": jnp.log(jnp.expm1(                # softplus^-1 of a in (.9,.999)
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / RGLRU_C)),
+        "wo": dense_init(ks[5], w, d),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, w) recurrent state
+    conv: jax.Array       # (B, conv_width-1, w) trailing inputs
+
+
+def rglru_init_state(cfg: RGLRUConfig, batch: int, dtype=jnp.bfloat16):
+    w = cfg.width
+    return RGLRUState(h=jnp.zeros((batch, w), jnp.float32),
+                      conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype))
+
+
+def _rglru_gates(p: Params, xb: jax.Array):
+    """a_t (log-space) and gated input for the linear recurrence."""
+    r = jax.nn.sigmoid(dense(p["wa"], xb).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["wi"], xb).astype(jnp.float32))
+    log_a = -RGLRU_C * r * jax.nn.softplus(p["lam"])          # log a_t <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xb.astype(jnp.float32))
+    return a, gated
+
+
+def _causal_depthwise_conv(x: jax.Array, kernel: jax.Array,
+                           prefix: Optional[jax.Array] = None) -> jax.Array:
+    """x (B,S,w), kernel (W,w) -> causal depthwise conv, optional state."""
+    W = kernel.shape[0]
+    pre = (prefix if prefix is not None
+           else jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype))
+    xp = jnp.concatenate([pre, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+              for i in range(W))
+    return out
+
+
+def rglru_block(p: Params, x: jax.Array, cfg: RGLRUConfig) -> jax.Array:
+    """Sequence form. x (B,S,d) -> (B,S,d) via associative scan over S."""
+    gate = jax.nn.gelu(dense(p["wy"], x))
+    xb = _causal_depthwise_conv(dense(p["wx"], x), p["conv"])
+    a, gated = _rglru_gates(p, xb)                 # (B,S,w) f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = dense(p["wo"], (h.astype(x.dtype) * gate))
+    return y
+
+
+def rglru_step(p: Params, x: jax.Array, state: RGLRUState, cfg: RGLRUConfig,
+               ) -> Tuple[jax.Array, RGLRUState]:
+    """Decode form. x (B,1,d); O(1) state update."""
+    gate = jax.nn.gelu(dense(p["wy"], x))
+    xin = dense(p["wx"], x)
+    xb = _causal_depthwise_conv(xin, p["conv"], prefix=state.conv)
+    new_conv = jnp.concatenate([state.conv, xin], axis=1)[:, 1:]
+    a, gated = _rglru_gates(p, xb)
+    h = a[:, 0] * state.h + gated[:, 0]
+    y = dense(p["wo"], h[:, None].astype(x.dtype) * gate)
+    return y, RGLRUState(h=h, conv=new_conv)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — chunkwise linear attention with decay
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int
+    chunk: int = 128
+    up_factor: int = 2
+
+    @property
+    def d_inner(self) -> int:
+        return self.up_factor * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def mlstm_init(key, cfg: MLSTMConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di, hd = cfg.d_model, cfg.d_inner, cfg.head_dim
+    return {
+        "wup": dense_init(ks[0], d, di),
+        "wgate": dense_init(ks[1], d, di),
+        "wq": dense_init(ks[2], di, di),
+        "wk": dense_init(ks[3], di, di),
+        "wv": dense_init(ks[4], di, di),
+        "wf": dense_init(ks[5], di, cfg.n_heads),   # forget gate (per head)
+        "wi": dense_init(ks[6], di, cfg.n_heads),   # input gate (per head)
+        "norm": rmsnorm_init(di),
+        "wdown": dense_init(ks[7], di, d),
+    }
+
+
+class MLSTMState(NamedTuple):
+    S: jax.Array      # (B, H, hd, hd) matrix memory
+    n: jax.Array      # (B, H, hd) normalizer
+
+
+def mlstm_init_state(cfg: MLSTMConfig, batch: int):
+    return MLSTMState(
+        S=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                    jnp.float32),
+        n=jnp.zeros((batch, cfg.n_heads, cfg.head_dim), jnp.float32))
+
+
+def _mlstm_qkvgates(p: Params, x: jax.Array, cfg: MLSTMConfig):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    up = dense(p["wup"], x)
+    gate = jax.nn.silu(dense(p["wgate"], x))
+    q = dense(p["wq"], up).reshape(B, S, H, hd) / math.sqrt(hd)
+    k = dense(p["wk"], up).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = dense(p["wv"], up).reshape(B, S, H, hd)
+    f = jax.nn.sigmoid(dense(p["wf"], up).astype(jnp.float32))   # (B,S,H)
+    i = jax.nn.sigmoid(dense(p["wi"], up).astype(jnp.float32))
+    return q, k, v, f, i, gate
+
+
+def mlstm_block(p: Params, x: jax.Array, cfg: MLSTMConfig) -> jax.Array:
+    """Chunkwise form: scan over S/chunk chunks carrying (S, n) state."""
+    B, S, _ = x.shape
+    H, hd, Q = cfg.n_heads, cfg.head_dim, min(cfg.chunk, x.shape[1])
+    assert S % Q == 0, "pad sequence to the mLSTM chunk size"
+    q, k, v, f, i, gate = _mlstm_qkvgates(p, x, cfg)
+
+    nc = S // Q
+    def rs(t):  # (B,S,...) -> (nc, B, Q, ...)
+        return t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, fc, ic = map(rs, (q, k, v, f, i))
+
+    def chunk_step(state, inp):
+        Sm, n = state
+        q, k, v, f, i = inp                       # (B,Q,H,*)
+        logf = jnp.log(jnp.maximum(f, 1e-9))      # (B,Q,H)
+        cum = jnp.cumsum(logf, axis=1)            # log g_t within chunk
+        g = jnp.exp(cum)                          # (B,Q,H)
+        total = jnp.exp(cum[:, -1])               # (B,H) full-chunk decay
+        # decay ratio D[t,s] = g_t / g_s for s <= t  (log-space, masked)
+        dl = cum[:, :, None, :] - cum[:, None, :, :]     # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        D = jnp.where(tri[None, :, :, None], jnp.exp(dl), 0.0)
+        att = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                         k.astype(jnp.float32))
+        att = att * D.transpose(0, 3, 1, 2)               # (B,H,Q,Q)
+        att = att * i.transpose(0, 2, 1)[:, :, None, :]   # weight by i_s
+        out_intra = jnp.einsum("bhts,bshd->bthd", att, v.astype(jnp.float32))
+        out_inter = jnp.einsum("bthd,bhde->bthe",
+                               (q.astype(jnp.float32) * g[..., None]), Sm)
+        n_inter = jnp.einsum("bthd,bhd->bth",
+                             q.astype(jnp.float32) * g[..., None], n)
+        # q_t . n_t^intra == sum_s att[t, s]  (same decay/gate weighting)
+        n_intra = jnp.sum(att, axis=-1).transpose(0, 2, 1)   # (B,Q,H)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)[..., None]
+        h = (out_inter + out_intra) / denom
+        # state update: S' = total*S + sum_s (total/g_s) i_s k_s v_s^T
+        w_s = (total[:, None] / jnp.maximum(g, 1e-30)) * i    # (B,Q,H)
+        Sm2 = total[..., None, None] * Sm + jnp.einsum(
+            "bsh,bshd,bshe->bhde", w_s, k.astype(jnp.float32),
+            v.astype(jnp.float32))
+        n2 = total[..., None] * n + jnp.einsum(
+            "bsh,bshd->bhd", w_s, k.astype(jnp.float32))
+        return (Sm2, n2), h
+
+    init = (jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32))
+    _, hs = jax.lax.scan(chunk_step, init, (qc, kc, vc, fc, ic))
+    h = hs.swapaxes(0, 1).reshape(B, S, H * hd).astype(x.dtype)
+    h = rmsnorm(p["norm"], h) * gate
+    return dense(p["wdown"], h)
+
+
+def mlstm_step(p: Params, x: jax.Array, state: MLSTMState, cfg: MLSTMConfig,
+               ) -> Tuple[jax.Array, MLSTMState]:
+    """Decode form: S' = f S + i k v^T; h = (q S') / max(|q n'|, 1)."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, f, i, gate = _mlstm_qkvgates(p, x, cfg)
+    q1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    f1, i1 = f[:, 0], i[:, 0]                      # (B,H)
+    S2 = (f1[..., None, None] * state.S
+          + i1[..., None, None] * k1[..., :, None] * v1[..., None, :])
+    n2 = f1[..., None] * state.n + i1[..., None] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, S2)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n2)), 1.0)
+    h = (num / den[..., None]).reshape(B, 1, H * hd).astype(x.dtype)
+    h = rmsnorm(p["norm"], h) * gate
+    return dense(p["wdown"], h), MLSTMState(S=S2, n=n2)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory; sequential — gate feedback)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int
+    ff_factor: float = 4.0 / 3.0
+
+
+def slstm_init(key, cfg: SLSTMConfig) -> Params:
+    ks = jax.random.split(key, 7)
+    d = cfg.d_model
+    dff = int(cfg.ff_factor * d)
+    return {
+        "wz": dense_init(ks[0], d, d), "rz": dense_init(ks[1], d, d),
+        "wi": dense_init(ks[2], d, d), "ri": dense_init(ks[3], d, d),
+        "wf": dense_init(ks[4], d, d), "rf": dense_init(ks[5], d, d),
+        "wo": dense_init(ks[6], d, d),
+        "ffn_up": dense_init(jax.random.fold_in(key, 1), d, dff),
+        "ffn_dn": dense_init(jax.random.fold_in(key, 2), dff, d),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, d)
+    n: jax.Array   # (B, d)
+    h: jax.Array   # (B, d)
+
+
+def slstm_init_state(cfg: SLSTMConfig, batch: int):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z)
+
+
+def _slstm_cell(p: Params, xt: jax.Array, st: SLSTMState) -> SLSTMState:
+    """One step; xt (B,d) f32. Gates see h_{t-1} (true recurrence)."""
+    hp = st.h
+    z = jnp.tanh(xt @ p["wz"]["w"].astype(jnp.float32)
+                 + hp @ p["rz"]["w"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xt @ p["wi"]["w"].astype(jnp.float32)
+                       + hp @ p["ri"]["w"].astype(jnp.float32))
+    f = jax.nn.sigmoid(xt @ p["wf"]["w"].astype(jnp.float32)
+                       + hp @ p["rf"]["w"].astype(jnp.float32))
+    c = f * st.c + i * z
+    n = f * st.n + i
+    h = c / jnp.maximum(jnp.abs(n), 1.0)
+    return SLSTMState(c=c, n=n, h=h)
+
+
+def slstm_block(p: Params, x: jax.Array, cfg: SLSTMConfig) -> jax.Array:
+    """Sequence form: lax.scan over time (O(S) sequential — inherent)."""
+    B, S, d = x.shape
+    xf = x.astype(jnp.float32)
+
+    def step(st, xt):
+        st2 = _slstm_cell(p, xt, st)
+        return st2, st2.h
+
+    st0 = slstm_init_state(cfg, B)
+    _, hs = jax.lax.scan(step, st0, xf.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    y = dense(p["wo"], h)
+    ff = dense(p["ffn_dn"], jax.nn.gelu(dense(p["ffn_up"], y)))
+    return y + ff
+
+
+def slstm_step(p: Params, x: jax.Array, state: SLSTMState, cfg: SLSTMConfig,
+               ) -> Tuple[jax.Array, SLSTMState]:
+    st2 = _slstm_cell(p, x[:, 0].astype(jnp.float32), state)
+    y = dense(p["wo"], st2.h[:, None].astype(x.dtype))
+    ff = dense(p["ffn_dn"], jax.nn.gelu(dense(p["ffn_up"], y)))
+    return y + ff, st2

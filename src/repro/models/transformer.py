@@ -1,0 +1,326 @@
+"""Generic decoder-only model assembled from an ArchConfig.
+
+Covers dense (qwen3/granite/qwen1.5), MoE (llama4/mixtral), MLA (minicpm3),
+hybrid (recurrentgemma), SSM (xlstm) and VLM-backbone (qwen2-vl) families.
+
+Depth is executed as ``jax.lax.scan`` over repeating pattern groups with
+stacked parameters — O(1) HLO in depth, remat-friendly, and the natural unit
+for the sharding planner (every group has identical sharding, so the
+"consistent partition" rule holds by construction across groups).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import attention as A
+from . import blocks as B
+from . import moe as M
+from . import recurrent as R
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-kind config extraction
+# ---------------------------------------------------------------------------
+
+def _attn_cfg(cfg: ArchConfig, *, local_only: bool = False) -> A.AttnConfig:
+    return A.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.hd, qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        window=cfg.window, rope_theta=cfg.rope_theta,
+        mrope_sections=cfg.mrope_sections,
+        cache_dtype=cfg.kv_cache_dtype)
+
+
+def _mla_cfg(cfg: ArchConfig) -> A.MLAConfig:
+    m = cfg.mla
+    return A.MLAConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                       q_lora_rank=m.q_lora_rank, kv_lora_rank=m.kv_lora_rank,
+                       qk_nope_dim=m.qk_nope_dim, qk_rope_dim=m.qk_rope_dim,
+                       v_head_dim=m.v_head_dim, rope_theta=cfg.rope_theta)
+
+
+def _moe_cfg(cfg: ArchConfig) -> M.MoEConfig:
+    return M.MoEConfig(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       n_experts=cfg.n_experts, top_k=cfg.top_k,
+                       capacity_factor=cfg.capacity_factor,
+                       shared_expert=cfg.shared_expert)
+
+
+def _rglru_cfg(cfg: ArchConfig) -> R.RGLRUConfig:
+    return R.RGLRUConfig(d_model=cfg.d_model)
+
+
+def _mlstm_cfg(cfg: ArchConfig) -> R.MLSTMConfig:
+    return R.MLSTMConfig(d_model=cfg.d_model, n_heads=cfg.slstm_heads,
+                         chunk=cfg.mlstm_chunk)
+
+
+def _slstm_cfg(cfg: ArchConfig) -> R.SLSTMConfig:
+    return R.SLSTMConfig(d_model=cfg.d_model, n_heads=cfg.slstm_heads)
+
+
+def _norm_init(cfg: ArchConfig):
+    return (B.rmsnorm_init if cfg.norm_kind == "rms"
+            else B.layernorm_init)(cfg.d_model)
+
+
+def _norm(cfg: ArchConfig, p, x):
+    return (B.rmsnorm if cfg.norm_kind == "rms" else B.layernorm)(p, x)
+
+
+def _mlp_init(key, cfg: ArchConfig):
+    return (B.swiglu_init if cfg.mlp_kind == "swiglu"
+            else B.gelu_mlp_init)(key, cfg.d_model, cfg.d_ff)
+
+
+def _mlp(cfg: ArchConfig, p, x):
+    return (B.swiglu if cfg.mlp_kind == "swiglu" else B.gelu_mlp)(p, x)
+
+
+# ---------------------------------------------------------------------------
+# block init / apply / cache / decode — dispatch on kind
+# ---------------------------------------------------------------------------
+
+def block_init(key, kind: str, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    if kind == "attn":
+        return {"ln1": _norm_init(cfg), "attn": A.attn_init(k1, _attn_cfg(cfg)),
+                "ln2": _norm_init(cfg), "mlp": _mlp_init(k2, cfg)}
+    if kind == "attn_moe":
+        return {"ln1": _norm_init(cfg), "attn": A.attn_init(k1, _attn_cfg(cfg)),
+                "ln2": _norm_init(cfg), "moe": M.moe_init(k2, _moe_cfg(cfg))}
+    if kind == "mla":
+        return {"ln1": _norm_init(cfg), "mla": A.mla_init(k1, _mla_cfg(cfg)),
+                "ln2": _norm_init(cfg), "mlp": _mlp_init(k2, cfg)}
+    if kind == "rglru":
+        return {"ln1": _norm_init(cfg), "rglru": R.rglru_init(k1, _rglru_cfg(cfg)),
+                "ln2": _norm_init(cfg), "mlp": _mlp_init(k2, cfg)}
+    if kind == "mlstm":
+        return {"ln1": _norm_init(cfg), "core": R.mlstm_init(k1, _mlstm_cfg(cfg))}
+    if kind == "slstm":
+        return {"ln1": _norm_init(cfg), "core": R.slstm_init(k1, _slstm_cfg(cfg))}
+    raise ValueError(kind)
+
+
+def block_apply(kind: str, p: Params, x: jax.Array, cfg: ArchConfig,
+                positions: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence residual block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_moe"):
+        x = x + A.attention(p["attn"], _norm(cfg, p["ln1"], x),
+                            _attn_cfg(cfg), positions)
+        h = _norm(cfg, p["ln2"], x)
+        if kind == "attn":
+            x = x + _mlp(cfg, p["mlp"], h)
+        else:
+            out, aux = M.moe_forward(p["moe"], h, _moe_cfg(cfg))
+            x = x + out
+    elif kind == "mla":
+        x = x + A.mla_attention(p["mla"], _norm(cfg, p["ln1"], x),
+                                _mla_cfg(cfg),
+                                positions if positions is None
+                                else positions[..., 0]
+                                if positions.ndim == 3 else positions)
+        x = x + _mlp(cfg, p["mlp"], _norm(cfg, p["ln2"], x))
+    elif kind == "rglru":
+        x = x + R.rglru_block(p["rglru"], _norm(cfg, p["ln1"], x),
+                              _rglru_cfg(cfg))
+        x = x + _mlp(cfg, p["mlp"], _norm(cfg, p["ln2"], x))
+    elif kind == "mlstm":
+        x = x + R.mlstm_block(p["core"], _norm(cfg, p["ln1"], x),
+                              _mlstm_cfg(cfg))
+    elif kind == "slstm":
+        x = x + R.slstm_block(p["core"], _norm(cfg, p["ln1"], x),
+                              _slstm_cfg(cfg))
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def block_cache_init(kind: str, cfg: ArchConfig, batch: int, max_len: int):
+    if kind in ("attn", "attn_moe"):
+        acfg = _attn_cfg(cfg)
+        # sliding-window caches are ring buffers of size window
+        n = min(max_len, acfg.window) if acfg.window else max_len
+        return A.init_cache(acfg, batch, n)
+    if kind == "mla":
+        return A.mla_init_cache(_mla_cfg(cfg), batch, max_len)
+    if kind == "rglru":
+        return R.rglru_init_state(_rglru_cfg(cfg), batch)
+    if kind == "mlstm":
+        return R.mlstm_init_state(_mlstm_cfg(cfg), batch)
+    if kind == "slstm":
+        return R.slstm_init_state(_slstm_cfg(cfg), batch)
+    raise ValueError(kind)
+
+
+def block_decode(kind: str, p: Params, x: jax.Array, cache, cfg: ArchConfig):
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_moe"):
+        h, cache = A.decode_step(p["attn"], _norm(cfg, p["ln1"], x), cache,
+                                 _attn_cfg(cfg))
+        x = x + h
+        h = _norm(cfg, p["ln2"], x)
+        if kind == "attn":
+            x = x + _mlp(cfg, p["mlp"], h)
+        else:
+            out, aux = M.moe_forward(p["moe"], h, _moe_cfg(cfg))
+            x = x + out
+    elif kind == "mla":
+        h, cache = A.mla_decode_step(p["mla"], _norm(cfg, p["ln1"], x), cache,
+                                     _mla_cfg(cfg))
+        x = x + h
+        x = x + _mlp(cfg, p["mlp"], _norm(cfg, p["ln2"], x))
+    elif kind == "rglru":
+        h, cache = R.rglru_step(p["rglru"], _norm(cfg, p["ln1"], x), cache,
+                                _rglru_cfg(cfg))
+        x = x + h
+        x = x + _mlp(cfg, p["mlp"], _norm(cfg, p["ln2"], x))
+    elif kind == "mlstm":
+        h, cache = R.mlstm_step(p["core"], _norm(cfg, p["ln1"], x), cache,
+                                _mlstm_cfg(cfg))
+        x = x + h
+    elif kind == "slstm":
+        h, cache = R.slstm_step(p["core"], _norm(cfg, p["ln1"], x), cache,
+                                _slstm_cfg(cfg))
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+class Transformer:
+    """Pure-function model bound to an ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig, *, remat: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_emb, k_body, k_tail = jax.random.split(key, 3)
+        params: Params = {"embedding": B.embedding_init(k_emb, cfg.vocab,
+                                                        cfg.d_model),
+                          "final_norm": _norm_init(cfg)}
+        group_keys = jax.random.split(k_body, cfg.n_groups)
+
+        def init_group(k):
+            ks = jax.random.split(k, len(cfg.pattern))
+            return {f"b{i}": block_init(ks[i], kind, cfg)
+                    for i, kind in enumerate(cfg.pattern)}
+
+        params["groups"] = jax.vmap(init_group)(group_keys)
+        if cfg.pattern_tail:
+            tkeys = jax.random.split(k_tail, len(cfg.pattern_tail))
+            params["tail"] = [block_init(tk, kind, cfg)
+                              for tk, kind in zip(tkeys, cfg.pattern_tail)]
+        return params
+
+    # -- full-sequence forward (train / prefill) -----------------------------
+    def forward(self, params: Params, tokens: jax.Array,
+                embeds: Optional[jax.Array] = None,
+                positions: Optional[jax.Array] = None,
+                constrain=None,
+                ) -> Tuple[jax.Array, jax.Array]:
+        """Returns (logits (B,S,V) f32, aux loss scalar).
+
+        ``embeds`` overrides token embedding for stub frontends (vlm/audio).
+        ``constrain`` (optional, x -> x) applies a sharding constraint to the
+        activations at every group boundary — the mesh-level analogue of the
+        paper's cascade-consistency rule: every inter-layer edge carries the
+        SAME activation partitioning, so no unplanned resharding collective
+        appears between layers (DESIGN.md §2 T3).
+        """
+        cfg = self.cfg
+        x = embeds if embeds is not None else B.embed(params["embedding"],
+                                                      tokens)
+        if constrain is not None:
+            x = constrain(x)
+        if positions is None and cfg.mrope_sections is not None:
+            # text-only M-RoPE: all three position streams equal arange
+            s = x.shape[1]
+            pos1 = jnp.broadcast_to(jnp.arange(s)[None], x.shape[:2])
+            positions = jnp.stack([pos1] * 3, axis=-1)
+
+        def group_fn(x, gp):
+            aux = jnp.zeros((), jnp.float32)
+            for i, kind in enumerate(cfg.pattern):
+                x, a = block_apply(kind, gp[f"b{i}"], x, cfg, positions)
+                aux = aux + a
+            if constrain is not None:
+                x = constrain(x)
+            return x, aux
+
+        if self.remat:
+            group_fn = jax.checkpoint(group_fn)
+
+        def scan_body(carry, gp):
+            x, aux = carry
+            x, a = group_fn(x, gp)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_body,
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   params["groups"])
+        for p_tail, kind in zip(params.get("tail", []), cfg.pattern_tail):
+            x, a = block_apply(kind, p_tail, x, cfg, positions)
+            aux = aux + a
+        x = _norm(cfg, params["final_norm"], x)
+        logits = B.unembed(params["embedding"], x)
+        return logits, aux
+
+    # -- KV cache -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+
+        def one_group(_):
+            return {f"b{i}": block_cache_init(kind, cfg, batch, max_len)
+                    for i, kind in enumerate(cfg.pattern)}
+
+        groups = jax.vmap(one_group)(jnp.arange(cfg.n_groups))
+        tail = [block_cache_init(kind, cfg, batch, max_len)
+                for kind in cfg.pattern_tail]
+        return {"groups": groups, "tail": tail,
+                "pos": jnp.zeros((), jnp.int32)}
+
+    # -- one-token decode ------------------------------------------------------
+    def decode_step(self, params: Params, token: jax.Array, cache,
+                    embeds: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Any]:
+        """token: (B, 1) int32 (or embeds (B, 1, d)); returns (logits, cache)."""
+        cfg = self.cfg
+        x = embeds if embeds is not None else B.embed(params["embedding"],
+                                                      token)
+
+        def scan_body(x, inp):
+            gp, gc = inp
+            new_c = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, c, _ = block_decode(kind, gp[f"b{i}"], x, gc[f"b{i}"], cfg)
+                new_c[f"b{i}"] = c
+            return x, new_c
+
+        x, new_groups = jax.lax.scan(scan_body, x,
+                                     (params["groups"], cache["groups"]))
+        new_tail = []
+        for p_tail, c_tail, kind in zip(params.get("tail", []), cache["tail"],
+                                        cfg.pattern_tail):
+            x, c, _ = block_decode(kind, p_tail, x, c_tail, cfg)
+            new_tail.append(c)
+        x = _norm(cfg, params["final_norm"], x)
+        logits = B.unembed(params["embedding"], x)
+        return logits, {"groups": new_groups, "tail": new_tail,
+                        "pos": cache["pos"] + 1}

@@ -1,0 +1,130 @@
+"""INT8 symmetric quantization with power-of-two scales (paper §4.3.2).
+
+The paper's scheme: activations and weights are INT8 symmetric; scales are
+powers of two so that requantization of the INT32 accumulator back to INT8
+is a single arithmetic right-shift. Bias is stored INT32 at the accumulator
+scale.
+
+    y_int32 = x_int8 @ w_int8 + b_int32
+    y_int8  = clip( (relu(y_int32)) >> shift, -128, 127 )
+
+All helpers are pure jnp and shape-polymorphic; they are shared by the
+Pallas kernels' reference oracles and by the serving runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def pow2_scale_exponent(x: jax.Array | np.ndarray, *,
+                        percentile: float = 100.0) -> int:
+    """Smallest power-of-two exponent e with |x|_{percentile} / 2^e <= 127.
+
+    ``percentile < 100`` clips activation outliers instead of stretching the
+    grid to cover them — on the jet-tagging DeepSets this recovers ~8 pp of
+    INT8 accuracy (0.889 -> 0.967 at pct=99.5 vs 0.992 float; see
+    tests/test_jetnets.py). Weights keep percentile=100 (their tails carry
+    signal; clipping them is not worth the resolution).
+    """
+    a = np.abs(np.asarray(x))
+    amax = float(np.percentile(a, percentile) if percentile < 100.0
+                 else np.max(a)) or 1e-8
+    amax = max(amax, 1e-8)
+    return int(np.ceil(np.log2(amax / INT8_MAX)))
+
+
+def quantize_pow2(x: jax.Array | np.ndarray) -> Tuple[jax.Array, int]:
+    """Symmetric INT8 quantization with a power-of-two scale 2^e.
+
+    Returns (q, e) with  x ~= q * 2^e.
+    """
+    e = pow2_scale_exponent(x)
+    q = jnp.clip(jnp.round(jnp.asarray(x) / (2.0 ** e)), INT8_MIN, INT8_MAX)
+    return q.astype(jnp.int8), e
+
+
+def dequantize_pow2(q: jax.Array, e: int) -> jax.Array:
+    return q.astype(jnp.float32) * (2.0 ** e)
+
+
+def requantize_shift(acc: jax.Array, shift: int) -> jax.Array:
+    """INT32 accumulator -> INT8 by arithmetic right shift (paper: bit-shift).
+
+    ``shift`` >= 0. Uses round-half-away-from-zero on the shifted-out bits,
+    matching the AIE SRS (shift-round-saturate) instruction family.
+    """
+    if shift == 0:
+        out = acc
+    else:
+        rnd = jnp.where(acc >= 0, 1 << (shift - 1), (1 << (shift - 1)) - 1)
+        out = (acc + rnd) >> shift
+    return jnp.clip(out, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedLinear:
+    """One INT8 dense layer: w_q (K, N) int8, bias int32, output shift."""
+
+    w_q: jax.Array
+    bias_q: Optional[jax.Array]     # int32, scale = 2^(e_x + e_w)
+    shift: int                      # e_out - e_x - e_w, >= 0
+    relu: bool
+    e_w: int                        # weight scale exponent
+    e_out: int                      # output activation scale exponent
+
+    def __post_init__(self):
+        assert self.w_q.dtype == jnp.int8
+        if self.bias_q is not None:
+            assert self.bias_q.dtype == jnp.int32
+        assert self.shift >= 0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedMLP:
+    """A fully-quantized MLP: input scale exponent + per-layer params."""
+
+    e_in: int
+    layers: Tuple[QuantizedLinear, ...]
+
+
+def quantize_mlp(weights: Sequence[np.ndarray],
+                 biases: Sequence[Optional[np.ndarray]],
+                 relus: Sequence[bool],
+                 sample_input: np.ndarray,
+                 act_exponents: Optional[Sequence[int]] = None,
+                 act_percentile: float = 99.5) -> QuantizedMLP:
+    """Post-training quantization of a float MLP to the paper's scheme.
+
+    Activation scale exponents are calibrated by propagating ``sample_input``
+    through the float network (or taken from ``act_exponents``), using
+    percentile clipping (see :func:`pow2_scale_exponent`).
+    """
+    e_in = pow2_scale_exponent(sample_input, percentile=act_percentile)
+    x = np.asarray(sample_input, np.float32)
+    e_prev = e_in
+    layers: List[QuantizedLinear] = []
+    for i, (w, b, relu) in enumerate(zip(weights, biases, relus)):
+        y = x @ w + (b if b is not None else 0.0)
+        if relu:
+            y = np.maximum(y, 0.0)
+        e_out = (act_exponents[i] if act_exponents is not None
+                 else pow2_scale_exponent(y, percentile=act_percentile))
+        w_q, e_w = quantize_pow2(w)
+        acc_e = e_prev + e_w
+        shift = max(0, e_out - acc_e)
+        e_out = acc_e + shift            # realizable output exponent
+        b_q = None
+        if b is not None:
+            b_q = jnp.asarray(np.round(b / (2.0 ** acc_e)), jnp.int32)
+        layers.append(QuantizedLinear(w_q=w_q, bias_q=b_q, shift=shift,
+                                      relu=relu, e_w=e_w, e_out=e_out))
+        x = y
+        e_prev = e_out
+    return QuantizedMLP(e_in=e_in, layers=tuple(layers))

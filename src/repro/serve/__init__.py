@@ -1,0 +1,165 @@
+"""μs-scale inference serving runtime (the paper's deployment scenario).
+
+The trigger-system setting: events arrive continuously; each must be
+classified within a hard latency budget. The engine mirrors μ-ORCA's
+execution model:
+
+  * the whole model is compiled as ONE fused kernel (cascade analogue) —
+    chosen by the VMEM fusion planner, with the per-layer chain as the
+    explicit baseline;
+  * requests are micro-batched within a bounded collection window (the
+    PLIO-ingest analogue: batching amortizes the fixed ingest/launch
+    overheads the paper's model makes explicit);
+  * the engine reports measured wall-time percentiles AND the Tier-B
+    overhead-aware latency estimate for the deployed TPU target.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tpu_model
+from repro.core.fusion_planner import FusionPlan, plan
+from repro.core.tpu_model import LayerShape
+from repro.quant import QuantizedMLP, quantize_pow2
+from repro.kernels.cascade_mlp import (cascade_mlp, cascade_mlp_ref, deepsets,
+                                       deepsets_ref, mlp_unfused)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    latencies_us: List[float] = dataclasses.field(default_factory=list)
+    batch_sizes: List[int] = dataclasses.field(default_factory=list)
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(self.latencies_us, p)) if self.latencies_us else 0.0
+
+    def summary(self) -> dict:
+        return {"n": len(self.latencies_us),
+                "p50_us": self.percentile(50), "p99_us": self.percentile(99),
+                "mean_batch": (float(np.mean(self.batch_sizes))
+                               if self.batch_sizes else 0.0)}
+
+
+@dataclasses.dataclass
+class _Request:
+    x: np.ndarray
+    t_submit: float
+    event: threading.Event = dataclasses.field(default_factory=threading.Event)
+    result: Optional[np.ndarray] = None
+
+
+class JetServer:
+    """Batching inference server for quantized MLP / DeepSets jet taggers.
+
+    ``mode``: 'fused' (single cascade kernel), 'unfused' (per-layer chain),
+    'ref' (pure-jnp oracle; used in tests for bit-identical checks).
+    """
+
+    def __init__(self, qmlp: QuantizedMLP, *,
+                 rho: Optional[QuantizedMLP] = None,
+                 agg: str = "mean",
+                 mode: str = "fused",
+                 max_batch: int = 64,
+                 window_us: float = 200.0,
+                 interpret: bool = True):
+        self.qmlp, self.rho, self.agg = qmlp, rho, agg
+        self.mode = mode
+        self.max_batch = max_batch
+        self.window_us = window_us
+        self.interpret = interpret
+        self.stats = ServeStats()
+        self._q: "queue.Queue[_Request]" = queue.Queue()
+        self._stop = threading.Event()
+        self._fn = self._build()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    # -- model function -------------------------------------------------------
+    def _build(self) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        is_deepsets = self.rho is not None
+        if is_deepsets:
+            # DeepSets consumes one event (M, F) at a time; vmap batches events.
+            if self.mode == "fused":
+                f = lambda x: deepsets(x, self.qmlp, self.rho, agg=self.agg,
+                                       interpret=self.interpret)
+            else:
+                f = lambda x: deepsets_ref(x, self.qmlp, self.rho, agg=self.agg)
+            fn = jax.jit(jax.vmap(f))
+        else:
+            if self.mode == "fused":
+                f = lambda x: cascade_mlp(x, self.qmlp,
+                                          interpret=self.interpret)
+            elif self.mode == "unfused":
+                f = lambda x: mlp_unfused(x, self.qmlp,
+                                          interpret=self.interpret)
+            else:
+                f = lambda x: cascade_mlp_ref(x, self.qmlp)
+            fn = jax.jit(jax.vmap(f))
+        return fn
+
+    # -- public API ------------------------------------------------------------
+    def submit(self, x: np.ndarray) -> _Request:
+        req = _Request(x=x, t_submit=time.perf_counter())
+        self._q.put(req)
+        return req
+
+    def infer(self, x: np.ndarray, timeout: float = 30.0) -> np.ndarray:
+        req = self.submit(x)
+        if not req.event.wait(timeout):
+            raise TimeoutError("inference timed out")
+        return req.result
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=5)
+
+    # -- batching loop ----------------------------------------------------------
+    def _collect(self) -> List[_Request]:
+        try:
+            first = self._q.get(timeout=0.05)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.window_us * 1e-6
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._q.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch
+
+    def _loop(self):
+        while not self._stop.is_set():
+            batch = self._collect()
+            if not batch:
+                continue
+            xs = jnp.asarray(np.stack([r.x for r in batch]))
+            out = np.asarray(self._fn(xs))
+            t_done = time.perf_counter()
+            for i, r in enumerate(batch):
+                r.result = out[i]
+                self.stats.latencies_us.append((t_done - r.t_submit) * 1e6)
+                r.event.set()
+            self.stats.batch_sizes.append(len(batch))
+
+    # -- Tier-B modeled latency on the TPU target --------------------------------
+    def modeled_latency_us(self) -> dict:
+        layers = [LayerShape(M=(self.qmlp.layers[0].w_q.shape[0] if self.rho
+                                else 64), K=l.w_q.shape[0], N=l.w_q.shape[1])
+                  for l in (list(self.qmlp.layers)
+                            + (list(self.rho.layers) if self.rho else []))]
+        fused = tpu_model.fused_chain_time_s(layers) * 1e6
+        unfused = tpu_model.unfused_chain_time_s(layers) * 1e6
+        return {"fused_us": fused, "unfused_us": unfused,
+                "speedup": unfused / fused}

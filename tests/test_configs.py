@@ -1,0 +1,62 @@
+"""Config registry + per-arch module consistency."""
+import importlib
+
+import pytest
+
+from repro.configs import ARCH_NAMES, FULL, SHAPES, cell_runnable, get
+
+MODULES = {
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "xlstm-350m": "xlstm_350m",
+    "qwen3-14b": "qwen3_14b",
+    "granite-8b": "granite_8b",
+    "qwen1.5-32b": "qwen15_32b",
+    "minicpm3-4b": "minicpm3_4b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "whisper-base": "whisper_base",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+# assigned spec: (n_layers, d_model, n_heads, n_kv, d_ff, vocab)
+ASSIGNED = {
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+    "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+    "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+    "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+}
+
+
+@pytest.mark.parametrize("arch", list(ARCH_NAMES))
+def test_full_config_matches_assignment(arch):
+    cfg = get(arch)
+    want = ASSIGNED[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_ff,
+           cfg.vocab)
+    assert got == want, (arch, got, want)
+
+
+@pytest.mark.parametrize("arch", list(ARCH_NAMES))
+def test_per_arch_module(arch):
+    mod = importlib.import_module(f"repro.configs.{MODULES[arch]}")
+    assert mod.config() == get(arch)
+    assert mod.reduced().d_model <= 64
+
+
+def test_cell_matrix_is_40():
+    assert len(ARCH_NAMES) * len(SHAPES) == 40
+    runnable = sum(cell_runnable(get(a), s)[0]
+                   for a in ARCH_NAMES for s in SHAPES)
+    assert runnable == 33   # 7 documented long_500k skips
+
+
+def test_jet_tagging_module():
+    from repro.configs import jet_tagging
+    assert jet_tagging.jsc_m().num_layers == 5
+    assert len(jet_tagging.REALISTIC_WORKLOADS) == 7

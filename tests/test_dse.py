@@ -1,0 +1,153 @@
+"""Tier-A tests: mapping, placement, and the §5.2 DSE."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aie_arch, layerspec as L
+from repro.core.dse import explore
+from repro.core.layerspec import LayerSpec, ModelSpec
+from repro.core.mapping import (Mapping, ModelMapping, cascade_compatible,
+                                enumerate_mappings)
+from repro.core.placement import east_adjacent, max_manhattan, place, Rect
+
+
+class TestMapping:
+    def test_per_aie_shape_padding(self):
+        m = Mapping(A=4, B=2, C=1, layer=LayerSpec(kind="mm", M=32, K=21, N=32))
+        assert m.H1 == 8            # 32/4, already a multiple of 2*B_M
+        assert m.W1 == 16           # ceil(21/2)=11 -> pad to B_K=8 multiple
+        assert m.W2 == 32
+
+    def test_rows_cols_layout(self):
+        m = Mapping(A=2, B=3, C=2, layer=LayerSpec(kind="mm", M=64, K=64, N=64))
+        assert m.rows == 4 and m.cols == 3 and m.tiles == 12
+
+    def test_cascade_rule(self):
+        l1 = LayerSpec(kind="mm", M=64, K=64, N=64)
+        l2 = LayerSpec(kind="mm", M=64, K=64, N=32)
+        a = Mapping(A=4, B=2, C=1, layer=l1)
+        b = Mapping(A=4, B=4, C=1, layer=l2)
+        assert cascade_compatible(a, b)                 # A=A', C=C'=1
+        c = Mapping(A=2, B=2, C=1, layer=l2)
+        assert not cascade_compatible(a, c)             # A mismatch
+        d = Mapping(A=4, B=2, C=2, layer=l2)
+        assert not cascade_compatible(a, d)             # C' != 1
+
+    @given(m=st.sampled_from([8, 16, 32, 64, 128]),
+           k=st.sampled_from([16, 21, 32, 64, 128]),
+           n=st.sampled_from([5, 10, 32, 64, 128]))
+    @settings(max_examples=30, deadline=None)
+    def test_enumeration_invariants(self, m, k, n):
+        layer = LayerSpec(kind="mm", M=m, K=k, N=n)
+        seen = set()
+        for mp in enumerate_mappings(layer, aie_arch.NUM_TILES):
+            key = (mp.A, mp.B, mp.C)
+            assert key not in seen
+            seen.add(key)
+            # powers of two
+            for v in key:
+                assert v & (v - 1) == 0
+            assert mp.rows <= aie_arch.ARRAY_ROWS
+            # per-AIE shape covers the layer
+            assert mp.A * mp.H1 >= m
+            assert mp.B * mp.W1 >= k
+            assert mp.C * mp.W2 >= n
+        assert seen    # never empty
+
+
+class TestPlacement:
+    def _mm(self, shapes):
+        layers = []
+        k = shapes[0][1]
+        for i, (mshape, kk, n) in enumerate(shapes):
+            layers.append(LayerSpec(kind="mm", M=mshape, K=kk, N=n, name=f"l{i}"))
+        return layers
+
+    def test_no_overlap_and_in_bounds(self):
+        model = L.synthetic_mlp(64, 6)
+        maps = []
+        for layer in model.layers:
+            maps.append(next(iter(enumerate_mappings(layer, 32))))
+        mm = ModelMapping(model=model, mappings=tuple(maps))
+        pl = place(mm)
+        assert pl is not None
+        seen = set()
+        for r in pl.rects:
+            assert 0 <= r.r0 and r.r1 <= aie_arch.ARRAY_ROWS
+            assert 0 <= r.c0 and r.c1 <= aie_arch.ARRAY_COLS
+            for t in r.tiles():
+                assert t not in seen
+                seen.add(t)
+
+    def test_east_adjacency_gives_cascade(self):
+        model = L.synthetic_mlp(32, 3)
+        maps = tuple(Mapping(A=4, B=2, C=1, layer=l) for l in model.layers)
+        mm = ModelMapping(model=model, mappings=maps)
+        pl = place(mm)
+        assert pl is not None
+        assert pl.cascade_links() == [True, True]
+
+    def test_manhattan(self):
+        a = Rect(0, 0, 2, 2)
+        b = Rect(0, 2, 2, 2)
+        assert east_adjacent(a, b)
+        assert max_manhattan(a, b) == 1 + 2   # row delta 1, col delta 2
+
+
+class TestDSE:
+    def test_respects_tile_budget(self):
+        r = explore(L.synthetic_mlp(64, 12, bias_relu=True))
+        assert r is not None
+        assert r.mapping.total_tiles <= aie_arch.NUM_TILES
+
+    def test_respects_plio_budget(self):
+        r = explore(L.jsc_m())
+        assert r is not None
+        assert r.mapping.plio_ports_needed() <= aie_arch.PLIO_PORTS
+
+    def test_prefers_cascade(self):
+        """On the paper's workloads the DSE should cascade every edge."""
+        for wl in ("JSC-M", "Deepsets-32"):
+            r = explore(L.REALISTIC_WORKLOADS[wl]())
+            links = r.placement.cascade_links()
+            assert all(links), (wl, links)
+
+    def test_cascade_beats_dma_ablation(self):
+        for wl in ("JSC-M", "JSC-XL", "Deepsets-64"):
+            cas = explore(L.REALISTIC_WORKLOADS[wl]())
+            dma = explore(L.REALISTIC_WORKLOADS[wl](), force_dma=True)
+            assert cas.latency.total < dma.latency.total
+
+    def test_128_cascade_constraint_limits_parallelism(self):
+        """Paper §6.3: for 128^3 the C=1 constraint caps μ-ORCA at an
+        8x4x1-style array (32 tiles/layer), unlike SSR's 4x4x4."""
+        r = explore(L.synthetic_mlp(128, 2, bias_relu=True))
+        assert r is not None
+        for m in r.mapping.mappings:
+            assert m.C == 1     # the cascade constraint the paper describes
+        # the PLIO-facing first layer is capped (paper's 8x4x1 point);
+        # interior layers may grow B since only cascade feeds them.
+        assert r.mapping.mappings[0].tiles <= 64
+
+    def test_budget_claims(self):
+        """Paper: within 1 μs, >12 layers of 32^3 or >4 layers of 64^3."""
+        assert explore(L.synthetic_mlp(32, 12, bias_relu=True)).latency_ns < 1000
+        assert explore(L.synthetic_mlp(64, 4, bias_relu=True)).latency_ns < 1000
+
+    def test_deepsets_under_budget(self):
+        """Paper: 0.93 μs for the 6-layer DeepSets (Deepsets-64); 6/7
+        realistic workloads < 1 μs with Deepsets-64-d at ~1.1 μs."""
+        r = explore(L.deepsets_64())
+        assert r.latency_ns < 1000
+        r2 = explore(L.deepsets_64_d())
+        assert 900 < r2.latency_ns < 1300
+
+    def test_dse_beats_naive_mapping(self):
+        """DSE must beat a naive 1-AIE-per-layer design."""
+        model = L.jsc_xl()
+        naive_maps = tuple(Mapping(A=1, B=1, C=1, layer=l) for l in model.layers)
+        mm = ModelMapping(model=model, mappings=naive_maps)
+        pl = place(mm)
+        from repro.core.perfmodel import end_to_end_cycles
+        naive = end_to_end_cycles(pl)
+        best = explore(model)
+        assert best.latency.total < naive.total

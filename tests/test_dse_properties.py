@@ -1,0 +1,82 @@
+"""Property-based tests of the DSE's structural invariants (hypothesis):
+whatever chain it is given, every returned design must be physically legal
+on the AIE array and internally consistent."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aie_arch, dse
+from repro.core.layerspec import LayerSpec, ModelSpec, deepsets
+from repro.core.mapping import cascade_compatible
+from repro.core.placement import east_adjacent
+
+
+@st.composite
+def mlp_chains(draw):
+    """Random MM chains with chained shapes (layer i's N == layer i+1's K)."""
+    n_layers = draw(st.integers(1, 6))
+    m = draw(st.sampled_from([8, 16, 32, 64]))
+    dims = [draw(st.sampled_from([5, 8, 16, 21, 32, 64, 128]))
+            for _ in range(n_layers + 1)]
+    layers = tuple(
+        LayerSpec(kind="mm", M=m, K=dims[i], N=dims[i + 1],
+                  bias=draw(st.booleans()), relu=i < n_layers - 1,
+                  name=f"l{i}")
+        for i in range(n_layers))
+    return ModelSpec(layers, name="rand")
+
+
+class TestDSEInvariants:
+    @settings(max_examples=25, deadline=None)
+    @given(model=mlp_chains())
+    def test_returned_design_is_legal(self, model):
+        r = dse.explore(model)
+        if r is None:
+            return                      # infeasible chains are allowed
+        rects = r.placement.rects
+        # 1. inside the array, no overlaps
+        for rect in rects:
+            assert 0 <= rect.r0 and rect.r1 <= aie_arch.ARRAY_ROWS
+            assert 0 <= rect.c0 and rect.c1 <= aie_arch.ARRAY_COLS
+        for i in range(len(rects)):
+            for j in range(i + 1, len(rects)):
+                assert not rects[i].overlaps(rects[j]), (i, j)
+        # 2. budgets
+        assert r.mapping.total_tiles <= aie_arch.NUM_TILES
+        assert r.mapping.plio_ports_needed() <= aie_arch.PLIO_PORTS
+        # 3. every cascade edge is both mapping-compatible and east-adjacent
+        maps = r.mapping.mappings
+        for i, is_cas in enumerate(r.placement.cascade_links()):
+            if is_cas:
+                assert cascade_compatible(maps[i], maps[i + 1])
+                agg = (maps[i].layer.kind == "agg"
+                       or maps[i + 1].layer.kind == "agg")
+                assert east_adjacent(rects[i], rects[i + 1],
+                                     exact_rows=not agg)
+        # 4. latency decomposition is consistent
+        lb = r.latency
+        assert len(lb.comp) == model.num_layers
+        assert len(lb.comm) == model.num_layers - 1
+        assert lb.total > 0 and lb.total < 1e9
+
+    @settings(max_examples=15, deadline=None)
+    @given(model=mlp_chains())
+    def test_cascade_never_loses_to_forced_dma(self, model):
+        """The search space with cascade edges available is a superset of
+        the forced-DMA space, so its optimum can never be worse."""
+        a = dse.explore(model)
+        b = dse.explore(model, force_dma=True)
+        if a is not None and b is not None:
+            assert a.latency.total <= b.latency.total + 1e-6
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.sampled_from([16, 32, 64]),
+           f=st.sampled_from([8, 16, 21]),
+           width=st.sampled_from([16, 32, 64]))
+    def test_deepsets_chains_explore(self, m, f, width):
+        model = deepsets(m, f, [width, width], [width, 5])
+        r = dse.explore(model)
+        assert r is not None
+        # the aggregation edge constraint: producer has C == 1
+        agg_idx = next(i for i, l in enumerate(model.layers)
+                       if l.kind == "agg")
+        assert r.mapping.mappings[agg_idx - 1].C == 1

@@ -1,0 +1,116 @@
+"""Flash attention Pallas kernel vs the pure-jnp oracle (interpret mode),
+with a hypothesis sweep over shapes/dtypes per the kernel test policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attn import (flash_attention, flash_attention_ref,
+                                      flash_mha)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(0, 1, shape)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("BH,S,d,bq,bk", [
+        (4, 256, 64, 128, 128),
+        (2, 512, 128, 128, 128),
+        (1, 128, 64, 64, 64),
+        (3, 384, 128, 128, 64),
+    ])
+    def test_matches_oracle(self, dtype, BH, S, d, bq, bk):
+        rng = np.random.default_rng(BH * S)
+        q, k, v = (_rand(rng, (BH, S, d), dtype) for _ in range(3))
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=TOL[dtype], rtol=TOL[dtype])
+
+    def test_noncausal(self):
+        rng = np.random.default_rng(7)
+        q, k, v = (_rand(rng, (2, 256, 64), jnp.float32) for _ in range(3))
+        out = flash_attention(q, k, v, causal=False, interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(B=st.integers(1, 2), S=st.sampled_from([96, 200, 256]),
+           H=st.sampled_from([4, 8]), kv=st.sampled_from([1, 2, 4]),
+           hd=st.sampled_from([32, 64]))
+    def test_gqa_wrapper_property(self, B, S, H, kv, hd):
+        """flash_mha == oracle for any (batch, seq, heads, kv-groups)."""
+        if H % kv:
+            kv = 1
+        rng = np.random.default_rng(B * S * H)
+        q = _rand(rng, (B, S, H, hd), jnp.float32)
+        k = _rand(rng, (B, S, kv, hd), jnp.float32)
+        v = _rand(rng, (B, S, kv, hd), jnp.float32)
+        out = flash_mha(q, k, v, block_q=64, block_k=64, interpret=True)
+        n_rep = H // kv
+        kr = jnp.repeat(k, n_rep, axis=2)
+        vr = jnp.repeat(v, n_rep, axis=2)
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        kf = kr.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        vf = vr.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        ref = flash_attention_ref(qf, kf, vf).reshape(
+            B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5)
+
+
+class TestChunkedXLAAttention:
+    """The model-level q-chunked path must equal the dense path."""
+
+    def test_chunked_equals_dense(self):
+        from repro.models import attention as A
+        rng = np.random.default_rng(3)
+        B, S, H, hd, kv = 2, 256, 4, 32, 2
+        q = _rand(rng, (B, S, H, hd), jnp.float32)
+        k = _rand(rng, (B, S, kv, hd), jnp.float32)
+        v = _rand(rng, (B, S, kv, hd), jnp.float32)
+        dense = A._sdpa(q, k, v, A._causal_mask(S, S, None), H // kv)
+        chunked = A._sdpa_q_chunked(q, k, v, None, H // kv, 64)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_chunked_respects_window(self):
+        from repro.models import attention as A
+        rng = np.random.default_rng(4)
+        B, S, H, hd = 1, 128, 2, 16
+        q = _rand(rng, (B, S, H, hd), jnp.float32)
+        k = _rand(rng, (B, S, H, hd), jnp.float32)
+        v = _rand(rng, (B, S, H, hd), jnp.float32)
+        dense = A._sdpa(q, k, v, A._causal_mask(S, S, 32), 1)
+        chunked = A._sdpa_q_chunked(q, k, v, 32, 1, 32)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestInt8KVCache:
+    def test_int8_cache_decode_close_to_bf16(self):
+        from repro.models import attention as A
+        cfg16 = A.AttnConfig(d_model=64, n_heads=4, n_kv=2, head_dim=16)
+        cfg8 = A.AttnConfig(d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                            cache_dtype="int8")
+        p = A.attn_init(jax.random.key(0), cfg16)
+        x = _rand(np.random.default_rng(5), (2, 1, 64), jnp.float32)
+        c16 = A.init_cache(cfg16, 2, 8)
+        c8 = A.init_cache(cfg8, 2, 8)
+        assert c8.k.dtype == jnp.int8
+        y16, _ = A.decode_step(p, x, c16, cfg16)
+        y8, _ = A.decode_step(p, x, c8, cfg8)
+        # int8 KV costs a little accuracy, not correctness
+        err = float(jnp.max(jnp.abs(y16 - y8)))
+        ref = float(jnp.max(jnp.abs(y16))) + 1e-9
+        assert err / ref < 0.12, (err, ref)

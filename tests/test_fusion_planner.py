@@ -1,0 +1,85 @@
+"""Tier-B core tests: TPU cost model + VMEM fusion planner."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tpu_model
+from repro.core.fusion_planner import plan, shapes_from_model
+from repro.core.layerspec import jsc_m, jsc_xl_d, synthetic_mlp
+from repro.core.tpu_model import LayerShape
+
+
+def _chain(dims, m=64):
+    return [LayerShape(M=m, K=dims[i], N=dims[i + 1])
+            for i in range(len(dims) - 1)]
+
+
+class TestTPUModel:
+    def test_fused_beats_unfused_small_models(self):
+        """For μs-scale models, launches+round-trips dominate: fusing the
+        whole chain must win (the paper's core claim, transferred)."""
+        layers = _chain([16, 64, 64, 64, 32, 5])
+        assert (tpu_model.fused_chain_time_s(layers)
+                < tpu_model.unfused_chain_time_s(layers))
+
+    def test_hbm_traffic_reduction(self):
+        layers = _chain([16, 64, 64, 64, 32, 5])
+        fused = tpu_model.hbm_traffic_bytes(layers, fused=True)
+        unfused = tpu_model.hbm_traffic_bytes(layers, fused=False)
+        assert fused < unfused
+        # intermediates (out=in of next) are counted once vs twice
+        inter = sum(l.out_bytes for l in layers[:-1])
+        assert unfused - fused == 2 * inter
+
+    def test_compute_term_scales(self):
+        a = tpu_model.compute_time_s(1e9)
+        b = tpu_model.compute_time_s(2e9)
+        assert b > a
+
+
+class TestFusionPlanner:
+    def test_unlimited_budget_single_group(self):
+        layers = _chain([16, 64, 64, 32, 5])
+        p = plan(layers, vmem_budget=1 << 40)
+        assert p.n_kernels == 1
+        assert p.groups == (tuple(range(len(layers))),)
+        assert p.speedup > 1.0
+
+    def test_tight_budget_splits(self):
+        layers = _chain([1024, 1024, 1024, 1024], m=128)
+        one = tpu_model.chain_vmem_bytes(layers[:1])
+        p = plan(layers, vmem_budget=int(one * 1.5))
+        assert p.n_kernels == len(layers)
+
+    def test_infeasible_single_layer_raises(self):
+        layers = [LayerShape(M=8, K=1 << 14, N=1 << 14)]
+        with pytest.raises(ValueError):
+            plan(layers, vmem_budget=1 << 20)
+
+    @given(depth=st.integers(1, 8), seed=st.integers(0, 5))
+    @settings(max_examples=15, deadline=None)
+    def test_dp_invariants(self, depth, seed):
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        dims = [int(rng.choice([16, 32, 64, 128, 256]))
+                for _ in range(depth + 1)]
+        layers = _chain(dims)
+        p = plan(layers)
+        # groups partition the chain in order
+        flat = [i for g in p.groups for i in g]
+        assert flat == list(range(depth))
+        # every group respects the budget
+        for g in p.groups:
+            chain = [layers[i] for i in g]
+            assert tpu_model.chain_vmem_bytes(chain) <= p.vmem_budget
+        # DP optimality sanity: plan time <= both extremes
+        assert p.time_s <= tpu_model.unfused_chain_time_s(layers) + 1e-12
+        if tpu_model.chain_vmem_bytes(layers) <= p.vmem_budget:
+            assert p.time_s <= tpu_model.fused_chain_time_s(layers) + 1e-12
+
+    def test_paper_models_fully_fuse(self):
+        """The jet-tagging models are tiny: the planner must fuse each into
+        ONE kernel — whole-model on-chip, like the paper's AIE mapping."""
+        for model in (jsc_m(), jsc_xl_d(), synthetic_mlp(64, 8)):
+            shapes = shapes_from_model(model)
+            p = plan(shapes)
+            assert p.n_kernels == 1

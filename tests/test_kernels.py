@@ -1,0 +1,177 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles.
+
+INT8 pipelines are bit-exact, so every comparison is exact equality.
+Hypothesis sweeps shapes; fixed seeds keep runs reproducible.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (QuantizedMLP, quantize_mlp, quantize_pow2,
+                         dequantize_pow2, requantize_shift)
+from repro.kernels.mm_int8 import mm_int8, mm_int8_ref
+from repro.kernels.cascade_mlp import (cascade_mlp, cascade_mlp_ref, deepsets,
+                                       deepsets_ref, mlp_unfused)
+from repro.kernels.global_agg import global_agg, global_agg_ref
+
+
+def _rand_int8(rng, shape):
+    return jnp.asarray(rng.integers(-128, 128, shape), jnp.int8)
+
+
+class TestMMInt8:
+    @given(m=st.sampled_from([1, 7, 8, 32, 64, 100, 128]),
+           k=st.sampled_from([5, 16, 21, 32, 64, 130]),
+           n=st.sampled_from([5, 10, 32, 64, 128, 200]),
+           bias=st.booleans(), relu=st.booleans(),
+           shift=st.sampled_from([0, 3, 7]))
+    @settings(max_examples=25, deadline=None)
+    def test_sweep_vs_ref(self, m, k, n, bias, relu, shift):
+        rng = np.random.default_rng(m * 1000 + k * 10 + n)
+        x = _rand_int8(rng, (m, k))
+        w = _rand_int8(rng, (k, n))
+        b = (jnp.asarray(rng.integers(-5000, 5000, (n,)), jnp.int32)
+             if bias else None)
+        got = mm_int8(x, w, b, shift=shift, relu=relu, interpret=True)
+        want = mm_int8_ref(x, w, b, shift=shift, relu=relu)
+        assert got.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_int32_raw_output(self):
+        rng = np.random.default_rng(0)
+        x, w = _rand_int8(rng, (16, 32)), _rand_int8(rng, (32, 16))
+        got = mm_int8(x, w, out_int8=False, interpret=True)
+        want = mm_int8_ref(x, w, out_int8=False)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_requant_saturates(self):
+        x = jnp.full((8, 128), 127, jnp.int8)
+        w = jnp.full((128, 8), 127, jnp.int8)
+        out = mm_int8(x, w, shift=0, interpret=True)
+        assert int(out.max()) == 127      # saturated, not wrapped
+
+
+class TestCascadeMLP:
+    def _random_qmlp(self, rng, dims, m):
+        ws = [rng.normal(0, 0.4, (dims[i], dims[i + 1]))
+              for i in range(len(dims) - 1)]
+        bs = [rng.normal(0, 0.1, (d,)) for d in dims[1:]]
+        relus = [True] * (len(ws) - 1) + [False]
+        xs = rng.normal(0, 1, (m, dims[0]))
+        q = quantize_mlp(ws, bs, relus, xs)
+        xq, _ = quantize_pow2(xs)
+        return q, xq
+
+    @given(depth=st.integers(2, 6),
+           m=st.sampled_from([8, 32, 64, 96]),
+           seed=st.integers(0, 5))
+    @settings(max_examples=12, deadline=None)
+    def test_fused_equals_ref(self, depth, m, seed):
+        rng = np.random.default_rng(seed)
+        dims = [int(rng.choice([16, 21, 32, 64]))] + \
+               [int(rng.choice([32, 64, 128])) for _ in range(depth - 1)] + [5]
+        q, xq = self._random_qmlp(rng, dims, m)
+        got = cascade_mlp(xq, q, interpret=True)
+        want = cascade_mlp_ref(xq, q)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fused_equals_unfused(self):
+        """The cascade (fused) kernel and the per-layer (DMA-analogue)
+        baseline must produce identical bits — same contract as the paper's
+        cascade vs DMA designs computing the same network."""
+        rng = np.random.default_rng(3)
+        q, xq = self._random_qmlp(rng, [16, 64, 64, 32, 5], 64)
+        fused = cascade_mlp(xq, q, interpret=True)
+        unfused = mlp_unfused(xq, q, interpret=True)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+    def test_quantization_tracks_float(self):
+        """End-to-end INT8 output must approximate the float MLP."""
+        rng = np.random.default_rng(1)
+        dims = [16, 64, 32, 8]
+        ws = [rng.normal(0, 0.4, (dims[i], dims[i + 1])) for i in range(3)]
+        bs = [rng.normal(0, 0.1, (d,)) for d in dims[1:]]
+        xs = rng.normal(0, 1, (64, 16))
+        q = quantize_mlp(ws, bs, [True, True, False], xs)
+        xq, _ = quantize_pow2(xs)
+        got = cascade_mlp(xq, q, interpret=True)
+        f = dequantize_pow2(got, q.layers[-1].e_out)
+        ref = np.maximum(xs @ ws[0] + bs[0], 0)
+        ref = np.maximum(ref @ ws[1] + bs[1], 0)
+        ref = ref @ ws[2] + bs[2]
+        err = np.abs(np.asarray(f) - ref).mean() / (np.abs(ref).mean() + 1e-9)
+        assert err < 0.12, err
+
+
+class TestGlobalAgg:
+    @given(m=st.sampled_from([4, 8, 16, 32, 64]),
+           f=st.sampled_from([5, 32, 40, 64, 130]),
+           op=st.sampled_from(["sum", "mean"]),
+           impl=st.sampled_from(["mac", "extract_add"]))
+    @settings(max_examples=20, deadline=None)
+    def test_sweep_vs_ref(self, m, f, op, impl):
+        rng = np.random.default_rng(m + f)
+        x = _rand_int8(rng, (m, f))
+        got = global_agg(x, op=op, impl=impl, interpret=True)
+        want = global_agg_ref(x, op=op)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_mac_equals_extract_add(self):
+        """Both implementations are the same function (Table 4's comparison
+        is about speed, not semantics)."""
+        rng = np.random.default_rng(7)
+        x = _rand_int8(rng, (64, 64))
+        a = global_agg(x, op="sum", impl="mac", interpret=True)
+        b = global_agg(x, op="sum", impl="extract_add", interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestDeepSets:
+    @given(m=st.sampled_from([16, 32, 64]),
+           agg=st.sampled_from(["mean", "sum"]),
+           seed=st.integers(0, 3))
+    @settings(max_examples=10, deadline=None)
+    def test_fused_deepsets_vs_ref(self, m, agg, seed):
+        rng = np.random.default_rng(seed)
+        phi_dims = [21, 32, 32]
+        phi_w = [rng.normal(0, 0.4, (phi_dims[i], phi_dims[i + 1]))
+                 for i in range(2)]
+        phi_b = [rng.normal(0, 0.1, (d,)) for d in phi_dims[1:]]
+        xs = rng.normal(0, 1, (m, 21))
+        phi = quantize_mlp(phi_w, phi_b, [True, True], xs)
+        h = np.maximum(xs @ phi_w[0] + phi_b[0], 0)
+        h = np.maximum(h @ phi_w[1] + phi_b[1], 0).mean(0, keepdims=True)
+        rho_w = [rng.normal(0, 0.3, (32, 10))]
+        rho_b = [rng.normal(0, 0.1, (10,))]
+        rho = quantize_mlp(rho_w, rho_b, [False], h)
+        xq, _ = quantize_pow2(xs)
+        got = deepsets(xq, phi, rho, agg=agg, interpret=True)
+        want = deepsets_ref(xq, phi, rho, agg=agg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestQuant:
+    @given(shift=st.integers(0, 10), seed=st.integers(0, 20))
+    @settings(max_examples=20, deadline=None)
+    def test_requant_shift_round_half_away(self, shift, seed):
+        rng = np.random.default_rng(seed)
+        acc = jnp.asarray(rng.integers(-2**20, 2**20, (64,)), jnp.int32)
+        got = requantize_shift(acc, shift)
+        # reference rounds HALF AWAY FROM ZERO (AIE SRS semantics) —
+        # np.round would be banker's rounding and differ on exact halves
+        a = np.asarray(acc) / (2 ** shift)
+        want = np.clip(np.where(a >= 0, np.floor(a + 0.5),
+                                np.ceil(a - 0.5)),
+                       -128, 127).astype(np.int8)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    @given(seed=st.integers(0, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_quantize_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(0, float(rng.uniform(0.01, 10)), (32, 32))
+        q, e = quantize_pow2(x)
+        err = np.abs(np.asarray(dequantize_pow2(q, e)) - x).max()
+        assert err <= 2.0 ** e        # within one quantization step

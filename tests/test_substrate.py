@@ -1,0 +1,158 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, serving."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.data import BigramSampler, JetConfig, LMDataConfig, Prefetcher, \
+    jet_batch, jet_stream
+from repro import ckpt
+
+
+class TestOptim:
+    def _quad(self):
+        params = {"a": jnp.array([2.0, -3.0]), "b": jnp.array(5.0)}
+        loss = lambda p: jnp.sum(p["a"] ** 2) + p["b"] ** 2
+        return params, loss
+
+    def test_adamw_converges_on_quadratic(self):
+        params, loss = self._quad()
+        cfg = optim.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                                total_steps=500)
+        state = optim.init(params)
+        for _ in range(300):
+            grads = jax.grad(loss)(params)
+            params, state, _ = optim.update(cfg, grads, state, params)
+        assert float(loss(params)) < 1e-3
+
+    def test_clip_by_global_norm(self):
+        g = {"x": jnp.full((4,), 10.0)}
+        clipped, norm = optim.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(20.0)
+        assert float(optim.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = optim.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_ratio=0.1)
+        assert float(optim.schedule(cfg, jnp.array(5))) == pytest.approx(0.5)
+        assert float(optim.schedule(cfg, jnp.array(100))) == pytest.approx(0.1)
+        mid = float(optim.schedule(cfg, jnp.array(55)))
+        assert 0.1 < mid < 1.0
+
+
+class TestData:
+    def test_jet_batch_learnable_structure(self):
+        """Class means must differ (a linear probe can beat chance)."""
+        cfg = JetConfig()
+        x, y = jet_batch(cfg, 512, seed=1)
+        assert x.shape == (512, 64, 16) and y.shape == (512,)
+        feats = x.mean(axis=1)
+        mus = np.stack([feats[y == c].mean(0) for c in range(cfg.n_classes)])
+        spread = np.linalg.norm(mus[:, None] - mus[None], axis=-1)
+        assert spread[np.triu_indices(5, 1)].min() > 0.3
+
+    def test_bigram_stream_entropy_floor(self):
+        cfg = LMDataConfig(vocab=128, seq_len=64, branching=4)
+        s = BigramSampler(cfg)
+        x, y = next(s.stream(8))
+        assert x.shape == (8, 64) and (y[:, :-1] == x[:, 1:]).all()
+
+    def test_prefetcher_order_and_completion(self):
+        it = iter([{"a": np.full((2,), i)} for i in range(5)])
+        out = list(Prefetcher(it, depth=2))
+        assert [int(b["a"][0]) for b in out] == list(range(5))
+
+
+class TestCkpt:
+    def _tree(self, v=0.0):
+        return {"w": jnp.full((4, 4), v), "opt": {"mu": jnp.full((4, 4), v)}}
+
+    def test_roundtrip(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 7, self._tree(3.0), extra={"loss": 1.5})
+        tree, step, extra = ckpt.restore(d, self._tree())
+        assert step == 7 and extra["loss"] == 1.5
+        assert float(tree["w"][0, 0]) == 3.0
+
+    def test_uncommitted_invisible(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, self._tree(1.0))
+        ckpt.save(d, 2, self._tree(2.0))
+        os.remove(os.path.join(d, "step_000000002", ckpt.COMMIT))
+        assert ckpt.latest_step(d) == 1
+        tree, step, _ = ckpt.restore(d, self._tree())
+        assert step == 1 and float(tree["w"][0, 0]) == 1.0
+
+    def test_retention(self, tmp_path):
+        d = str(tmp_path)
+        for s in range(5):
+            ckpt.save(d, s, self._tree(float(s)))
+        ckpt.retain(d, keep=2)
+        assert ckpt.latest_step(d) == 4
+        tree, step, _ = ckpt.restore(d, self._tree())
+        assert step == 4
+
+    def test_async_checkpointer(self, tmp_path):
+        d = str(tmp_path)
+        ac = ckpt.AsyncCheckpointer(d, keep=2)
+        for s in (1, 2, 3):
+            ac.maybe_save(s, self._tree(float(s)))
+        ac.wait()
+        assert ckpt.latest_step(d) == 3
+        tree, _, _ = ckpt.restore(d, self._tree())
+        assert float(tree["w"][0, 0]) == 3.0
+
+
+class TestServe:
+    @pytest.fixture(scope="class")
+    def qmlp(self):
+        from repro.quant import quantize_mlp
+        rng = np.random.default_rng(0)
+        ws = [rng.normal(0, 0.4, (16, 32)), rng.normal(0, 0.3, (32, 5))]
+        bs = [rng.normal(0, 0.1, (32,)), rng.normal(0, 0.1, (5,))]
+        xs = rng.normal(0, 1, (64, 16))
+        return quantize_mlp(ws, bs, [True, False], xs)
+
+    def test_serve_fused_equals_ref(self, qmlp):
+        from repro.serve import JetServer
+        from repro.quant import quantize_pow2
+        rng = np.random.default_rng(1)
+        x = np.asarray(quantize_pow2(rng.normal(0, 1, (64, 16)))[0])
+        srv_f = JetServer(qmlp, mode="fused")
+        srv_r = JetServer(qmlp, mode="ref")
+        try:
+            a = srv_f.infer(x)
+            b = srv_r.infer(x)
+            np.testing.assert_array_equal(a, b)
+            assert srv_f.stats.summary()["n"] == 1
+        finally:
+            srv_f.close()
+            srv_r.close()
+
+    def test_batching_window_batches_requests(self, qmlp):
+        from repro.serve import JetServer
+        from repro.quant import quantize_pow2
+        rng = np.random.default_rng(2)
+        srv = JetServer(qmlp, mode="ref", max_batch=8, window_us=50_000)
+        try:
+            reqs = [srv.submit(np.asarray(
+                quantize_pow2(rng.normal(0, 1, (64, 16)))[0]))
+                for _ in range(8)]
+            for r in reqs:
+                assert r.event.wait(30)
+            assert max(srv.stats.batch_sizes) > 1
+        finally:
+            srv.close()
+
+    def test_modeled_latency_fused_wins(self, qmlp):
+        from repro.serve import JetServer
+        srv = JetServer(qmlp, mode="ref")
+        try:
+            m = srv.modeled_latency_us()
+            assert m["speedup"] > 1.0
+            assert m["fused_us"] < 10.0       # μs scale on the TPU target
+        finally:
+            srv.close()
