@@ -9,7 +9,7 @@ import time
 
 from . import (dse_quality, fig9_perfmodel_error, fig10_synthetic_mlp,
                fig11_realistic, roofline_report, table2_single_aie,
-               table4_global_agg, tpu_cascade_fusion)
+               table4_global_agg, throughput_pareto, tpu_cascade_fusion)
 
 BENCHES = {
     "table2_single_aie": table2_single_aie.main,
@@ -20,6 +20,7 @@ BENCHES = {
     "tpu_cascade_fusion": tpu_cascade_fusion.main,
     "dse_quality": dse_quality.main,
     "roofline_report": roofline_report.main,
+    "throughput_pareto": throughput_pareto.main,
 }
 
 

@@ -1,0 +1,87 @@
+"""Throughput-aware DSE: {latency, events/sec, tiles} Pareto frontiers.
+
+Multi-tenant extension beyond the paper (see repro.core.tenancy): the §5.2
+DSE optimizes ONE instance's latency, but its winners leave most of the
+8 x 38 VEK280 array idle. Here we sweep the latency/replica-count trade-off
+for each Table 3-style workload — every design on the single-instance
+{tiles, latency} Pareto frontier is replicated as many times as the shared
+grid and PLIO budget admit — and report the resulting {per-event latency,
+modeled events/sec} frontier, plus a heterogeneous two-tenant mix.
+
+Emits the full frontier as JSON (stdout and benchmarks/out/
+throughput_pareto.json). Key acceptance figure: packed replicas of the
+latency-optimal design multiply events/sec at *unchanged* per-event Tier-A
+latency (>= 2x vs the single-replica deployment).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import layerspec, tenancy
+
+WORKLOADS = ["Deepsets-32", "Deepsets-64", "JSC-M", "JSC-XL"]
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
+                        "throughput_pareto.json")
+
+
+def main() -> dict:
+    report = {"array": {"rows": 8, "cols": 38, "plio_ports": 64},
+              "workloads": {}, "mix": None}
+    res = {}
+    for name in WORKLOADS:
+        model = layerspec.REALISTIC_WORKLOADS[name]()
+        frontier = tenancy.throughput_frontier(model)
+        if not frontier:
+            print(f"{name}: no feasible design, skipped")
+            continue
+        # frontier[0] replicates the latency-optimal design (same latency
+        # and tiles as dse.explore's winner), so it doubles as the
+        # single-replica baseline — no separate explore() run needed.
+        single_lat = frontier[0].latency_ns
+        single_eps = 1e9 / single_lat
+        # Best throughput achievable without giving up ANY per-event latency:
+        # replicas of the latency-optimal design itself.
+        iso = frontier[0]
+        peak = max(frontier, key=lambda pt: pt.events_per_sec)
+        wl = {
+            "single_replica": {"latency_ns": round(single_lat, 2),
+                               "events_per_sec": round(single_eps, 1),
+                               "tiles": frontier[0].tiles_per_replica},
+            "frontier": [pt.as_dict() for pt in frontier],
+            "iso_latency": iso.as_dict(),
+            "iso_latency_speedup": round(iso.events_per_sec / single_eps, 2),
+            "peak_throughput_speedup": round(peak.events_per_sec / single_eps,
+                                             2),
+        }
+        report["workloads"][name] = wl
+        print(f"{name}: single {single_lat:.0f} ns = {single_eps / 1e6:.2f} "
+              f"Meps | iso-latency x{wl['iso_latency_speedup']:.1f} "
+              f"({iso.replicas} replicas) | peak "
+              f"x{wl['peak_throughput_speedup']:.1f} "
+              f"({peak.replicas} x {peak.tiles_per_replica} tiles @ "
+              f"{peak.latency_ns:.0f} ns)")
+        key = name.lower().replace("-", "")
+        res[f"{key}_iso_lat_speedup"] = wl["iso_latency_speedup"]
+
+    # Heterogeneous mix: two taggers sharing the array, as deployed triggers do.
+    mix_spec = [("Deepsets-32", layerspec.deepsets_32(), 3),
+                ("JSC-M", layerspec.jsc_m(), 3)]
+    sched = tenancy.pack_mix(mix_spec)
+    if sched is not None:
+        report["mix"] = sched.summary()
+        print(f"mix (3x Deepsets-32 + 3x JSC-M): {sched.total_tiles} tiles, "
+              f"{sched.plio_ports_used} PLIO ports, "
+              f"{sched.throughput_eps() / 1e6:.2f} Meps modeled")
+        res["mix_meps"] = sched.throughput_eps() / 1e6
+
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\nJSON frontier written to {OUT_PATH}")
+    print(json.dumps(report["workloads"]["Deepsets-32"], indent=2))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -94,17 +94,16 @@ def _pareto_insert(frontier: List[Tuple[int, float, tuple]], tiles: int,
     return True
 
 
-def explore(model: ModelSpec, *,
-            rows: int = aie_arch.ARRAY_ROWS,
-            cols: int = aie_arch.ARRAY_COLS,
-            plio: int = aie_arch.PLIO_PORTS,
-            dtype: str = "int8",
-            p: OverheadParams = OVERHEADS,
-            force_dma: bool = False,
-            max_tiles_per_layer: Optional[int] = None,
-            top_k: int = 48,
-            include_plio: bool = True) -> Optional[DSEResult]:
-    """Run the §5.2 DSE. ``force_dma=True`` gives the μ-ORCA-DMA ablation."""
+def _dp_finals(model: ModelSpec, *,
+               rows: int, cols: int, plio: int, dtype: str,
+               p: OverheadParams, force_dma: bool,
+               max_tiles_per_layer: Optional[int],
+               include_plio: bool):
+    """Run the Pareto DP; returns (finals, layer_maps, dp_states) or None.
+
+    ``finals`` is the estimate-cost-sorted list of (cost, backpointer) over
+    every surviving DP terminal; backpointers index into ``layer_maps``.
+    """
     total_tiles = rows * cols
     per_layer_cap = max_tiles_per_layer or total_tiles
     layer_maps: List[List[Mapping]] = []
@@ -164,30 +163,105 @@ def explore(model: ModelSpec, *,
         for tiles, cost, back in frontier:
             finals.append((cost + ccost + ocost, back))
     finals.sort(key=lambda x: x[0])
+    return finals, layer_maps, dp_states
 
-    # --- re-score top-K with real placement --------------------------------
+
+def _score_back(model: ModelSpec, back: tuple, layer_maps, *,
+                rows: int, cols: int, plio: int,
+                p: OverheadParams, force_dma: bool,
+                include_plio: bool, dp_states: int) -> Optional[DSEResult]:
+    """Re-score one DP backpointer with the real placement (restores
+    exactness of the DMA Manhattan distances)."""
+    maps = tuple(layer_maps[i][j] for i, j in enumerate(back))
+    mm = ModelMapping(model=model, mappings=maps)
+    if not mm.fits(rows, cols, plio):
+        return None
+    pl = place(mm, rows, cols)
+    if pl is None:
+        return None
+    lat = end_to_end_cycles(pl, p=p, include_plio=include_plio)
+    if force_dma:
+        # ablation: cost every edge as DMA even if adjacency allows cascade
+        lat = _recost_all_dma(pl, p=p, include_plio=include_plio)
+    return DSEResult(model=model, mapping=mm, placement=pl, latency=lat,
+                     candidates_scored=0, dp_states=dp_states)
+
+
+def explore(model: ModelSpec, *,
+            rows: int = aie_arch.ARRAY_ROWS,
+            cols: int = aie_arch.ARRAY_COLS,
+            plio: int = aie_arch.PLIO_PORTS,
+            dtype: str = "int8",
+            p: OverheadParams = OVERHEADS,
+            force_dma: bool = False,
+            max_tiles_per_layer: Optional[int] = None,
+            top_k: int = 48,
+            include_plio: bool = True) -> Optional[DSEResult]:
+    """Run the §5.2 DSE. ``force_dma=True`` gives the μ-ORCA-DMA ablation."""
+    r = _dp_finals(model, rows=rows, cols=cols, plio=plio, dtype=dtype, p=p,
+                   force_dma=force_dma, max_tiles_per_layer=max_tiles_per_layer,
+                   include_plio=include_plio)
+    if r is None:
+        return None
+    finals, layer_maps, dp_states = r
     best: Optional[DSEResult] = None
     scored = 0
     for est_cost, back in finals[:top_k]:
-        maps = tuple(layer_maps[i][j] for i, j in enumerate(back))
-        mm = ModelMapping(model=model, mappings=maps)
-        if not mm.fits(rows, cols, plio):
+        cand = _score_back(model, back, layer_maps, rows=rows, cols=cols,
+                           plio=plio, p=p, force_dma=force_dma,
+                           include_plio=include_plio, dp_states=dp_states)
+        if cand is None:
             continue
-        pl = place(mm, rows, cols)
-        if pl is None:
-            continue
-        lat = end_to_end_cycles(pl, p=p, include_plio=include_plio)
-        if force_dma:
-            # ablation: cost every edge as DMA even if adjacency allows cascade
-            lat = _recost_all_dma(pl, p=p, include_plio=include_plio)
         scored += 1
-        if best is None or lat.total < best.latency.total:
-            best = DSEResult(model=model, mapping=mm, placement=pl,
-                             latency=lat, candidates_scored=scored,
-                             dp_states=dp_states)
+        if best is None or cand.latency.total < best.latency.total:
+            best = cand
     if best is not None:
         best.candidates_scored = scored
     return best
+
+
+def search(model: ModelSpec, *,
+           rows: int = aie_arch.ARRAY_ROWS,
+           cols: int = aie_arch.ARRAY_COLS,
+           plio: int = aie_arch.PLIO_PORTS,
+           dtype: str = "int8",
+           p: OverheadParams = OVERHEADS,
+           force_dma: bool = False,
+           max_tiles_per_layer: Optional[int] = None,
+           top_k: int = 96,
+           include_plio: bool = True) -> List[DSEResult]:
+    """Placement-validated Pareto frontier over {tiles, latency}.
+
+    Same search as :func:`explore`, but instead of only the latency winner it
+    returns every design on the {tiles used, end-to-end latency} Pareto
+    frontier among the re-scored top-K candidates, sorted by ascending tile
+    count (so the last entry is the latency-optimal design). This is the
+    input to the multi-tenant throughput DSE (:mod:`repro.core.tenancy`):
+    a design using fewer tiles admits more replicas on the shared array, so
+    points that lose on single-instance latency can win on events/sec.
+    """
+    r = _dp_finals(model, rows=rows, cols=cols, plio=plio, dtype=dtype, p=p,
+                   force_dma=force_dma, max_tiles_per_layer=max_tiles_per_layer,
+                   include_plio=include_plio)
+    if r is None:
+        return []
+    finals, layer_maps, dp_states = r
+    scored: List[DSEResult] = []
+    for est_cost, back in finals[:top_k]:
+        cand = _score_back(model, back, layer_maps, rows=rows, cols=cols,
+                           plio=plio, p=p, force_dma=force_dma,
+                           include_plio=include_plio, dp_states=dp_states)
+        if cand is not None:
+            scored.append(cand)
+    for cand in scored:
+        cand.candidates_scored = len(scored)
+    # Pareto filter: keep designs not dominated on (tiles, latency).
+    frontier: List[DSEResult] = []
+    for cand in sorted(scored, key=lambda d: (d.mapping.total_tiles,
+                                              d.latency.total)):
+        if all(cand.latency.total < kept.latency.total for kept in frontier):
+            frontier.append(cand)
+    return frontier
 
 
 def _recost_all_dma(placement: Placement, *, p: OverheadParams,

@@ -45,6 +45,9 @@ class Rect:
         return [(r, c) for r in range(self.r0, self.r1)
                 for c in range(self.c0, self.c1)]
 
+    def translated(self, dr: int, dc: int) -> "Rect":
+        return Rect(self.r0 + dr, self.c0 + dc, self.h, self.w)
+
 
 def east_adjacent(prev: Rect, nxt: Rect, *, exact_rows: bool = True) -> bool:
     """True when ``nxt`` starts in the column immediately east of ``prev``.
@@ -103,6 +106,53 @@ class Placement:
         return [max_manhattan(self.rects[i], self.rects[i + 1])
                 for i in range(len(self.rects) - 1)]
 
+    def bounding_box(self) -> Rect:
+        """Tightest rectangle enclosing every layer rect."""
+        r0 = min(r.r0 for r in self.rects)
+        c0 = min(r.c0 for r in self.rects)
+        r1 = max(r.r1 for r in self.rects)
+        c1 = max(r.c1 for r in self.rects)
+        return Rect(r0, c0, r1 - r0, c1 - c0)
+
+    def translated(self, dr: int, dc: int) -> "Placement":
+        """Rigid translation of the whole design on the grid.
+
+        Adjacency (hence cascade links) and all pairwise Manhattan distances
+        are translation-invariant, so the Tier-A latency of the translated
+        placement is identical — this is what lets the multi-tenant packer
+        (:mod:`repro.core.tenancy`) move whole instances around freely.
+        """
+        return Placement(model_mapping=self.model_mapping,
+                         rects=tuple(r.translated(dr, dc) for r in self.rects))
+
+
+def rect_is_free(occ: List[List[bool]], r0: int, c0: int, h: int,
+                 w: int) -> bool:
+    """Is the h x w rectangle anchored at (r0, c0) in bounds and unoccupied?"""
+    rows, cols = len(occ), len(occ[0])
+    if r0 + h > rows or c0 + w > cols:
+        return False
+    return all(not occ[r][c] for r in range(r0, r0 + h)
+               for c in range(c0, c0 + w))
+
+
+def find_free_anchor(occ: List[List[bool]], h: int,
+                     w: int) -> Optional[Tuple[int, int]]:
+    """Bottom-left first-fit: the free anchor with the minimum row index,
+    then minimum column index (paper §5.2). Shared by the intra-model
+    layer placement here and the multi-tenant packer (repro.core.tenancy).
+    """
+    for r0 in range(len(occ)):
+        for c0 in range(len(occ[0])):
+            if rect_is_free(occ, r0, c0, h, w):
+                return (r0, c0)
+    return None
+
+
+def mark_occupied(occ: List[List[bool]], rect: Rect) -> None:
+    for r, c in rect.tiles():
+        occ[r][c] = True
+
 
 def place(model_mapping: ModelMapping,
           rows: int = aie_arch.ARRAY_ROWS,
@@ -117,17 +167,6 @@ def place(model_mapping: ModelMapping,
     placed: List[Rect] = []
     occ = [[False] * cols for _ in range(rows)]
 
-    def free(r0: int, c0: int, h: int, w: int) -> bool:
-        if r0 + h > rows or c0 + w > cols:
-            return False
-        return all(not occ[r][c] for r in range(r0, r0 + h)
-                   for c in range(c0, c0 + w))
-
-    def commit(rect: Rect) -> None:
-        for r, c in rect.tiles():
-            occ[r][c] = True
-        placed.append(rect)
-
     mappings = model_mapping.mappings
     for i, m in enumerate(mappings):
         h, w = m.rows, m.cols
@@ -135,17 +174,14 @@ def place(model_mapping: ModelMapping,
         # Preferred: east-adjacent to the previous layer when cascade-legal.
         if placed and cascade_compatible(mappings[i - 1], m):
             prev = placed[-1]
-            if prev.h == h and free(prev.r0, prev.c1, h, w):
+            if prev.h == h and rect_is_free(occ, prev.r0, prev.c1, h, w):
                 anchor = Rect(prev.r0, prev.c1, h, w)
         if anchor is None:
-            for r0 in range(rows):
-                for c0 in range(cols):
-                    if free(r0, c0, h, w):
-                        anchor = Rect(r0, c0, h, w)
-                        break
-                if anchor is not None:
-                    break
+            at = find_free_anchor(occ, h, w)
+            if at is not None:
+                anchor = Rect(at[0], at[1], h, w)
         if anchor is None:
             return None
-        commit(anchor)
+        mark_occupied(occ, anchor)
+        placed.append(anchor)
     return Placement(model_mapping=model_mapping, rects=tuple(placed))

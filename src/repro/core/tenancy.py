@@ -1,0 +1,358 @@
+"""Multi-tenant array scheduling: replica packing + throughput-aware DSE.
+
+The paper's DSE (§5.2) optimizes the latency of ONE model instance, and its
+winning designs occupy only a small fraction of the 8 x 38 = 304-tile VEK280
+array (e.g. the latency-optimal Deepsets-32 design uses 31 tiles). Trigger
+systems care about *throughput at bounded latency*: events arrive at a fixed
+rate and every idle tile is wasted capacity. This module adds the missing
+spatial-multi-tenancy axis:
+
+  * :func:`pack` places R independent instances (replicas of one model, or a
+    heterogeneous mix of tenants) onto the shared grid. Each instance is the
+    rigid translation of a standalone §5.2 placement, so its cascade links
+    and DMA Manhattan distances — hence its Tier-A latency — are *unchanged*
+    (see :meth:`repro.core.placement.Placement.translated`). Instances
+    reserve their full bounding box, which keeps intra-instance DMA routes
+    disjoint across tenants (the Tier-A model assumes congestion-free
+    routing; box isolation makes that assumption hold by construction).
+  * The shared PLIO budget is a fleet-wide constraint: the array edge has P
+    ports total, and tenant i consumes ``A_1*B_1 + A_n*C_n`` of them, so
+    Σ_i ports_i <= P bounds the replica count even when tiles remain.
+  * :func:`throughput_frontier` runs the throughput-aware DSE: it takes the
+    per-model {tiles, latency} Pareto frontier from :func:`repro.core.dse.
+    search` and, for each design, packs as many replicas as tiles + PLIO
+    allow. Replicas operate on independent events, so modeled throughput is
+    ``R / latency`` at *unchanged per-event latency* — small-tile designs
+    that lose the single-instance latency race can win on events/sec, which
+    is why the frontier (not just the latency winner) is the right input.
+  * :func:`pack_mix` schedules a heterogeneous tenant mix (as deployed
+    triggers do — several taggers sharing one device), backing designs off
+    along their frontiers until the mix fits.
+
+The serving-side counterpart is :class:`repro.serve.fleet.FleetServer`,
+which dispatches measured micro-batches across R compiled replicas and
+reports wall-clock percentiles next to these Tier-A numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import aie_arch, dse
+from .aie_arch import OverheadParams, OVERHEADS
+from .dse import DSEResult
+from .layerspec import ModelSpec
+from .placement import (Placement, Rect, find_free_anchor, mark_occupied)
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """One placed tenant instance: a standalone design translated onto the
+    shared grid at ``offset`` (row, col of its bounding box's bottom-left)."""
+
+    tenant: str
+    replica: int
+    design: DSEResult
+    placement: Placement
+    offset: Tuple[int, int]
+
+    @property
+    def latency_ns(self) -> float:
+        return self.design.latency.total_ns
+
+    @property
+    def tiles(self) -> int:
+        return self.design.mapping.total_tiles
+
+    @property
+    def plio_ports(self) -> int:
+        return self.design.mapping.plio_ports_needed()
+
+    @property
+    def bbox(self) -> Rect:
+        return self.placement.bounding_box()
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySchedule:
+    """A multi-tenant assignment of the shared AIE array."""
+
+    instances: Tuple[Instance, ...]
+    rows: int = aie_arch.ARRAY_ROWS
+    cols: int = aie_arch.ARRAY_COLS
+    plio: int = aie_arch.PLIO_PORTS
+
+    @property
+    def total_tiles(self) -> int:
+        return sum(i.tiles for i in self.instances)
+
+    @property
+    def plio_ports_used(self) -> int:
+        return sum(i.plio_ports for i in self.instances)
+
+    @property
+    def utilization(self) -> float:
+        return self.total_tiles / (self.rows * self.cols)
+
+    def per_tenant(self) -> Dict[str, List[Instance]]:
+        out: Dict[str, List[Instance]] = {}
+        for i in self.instances:
+            out.setdefault(i.tenant, []).append(i)
+        return out
+
+    def throughput_eps(self) -> float:
+        """Modeled fleet events/sec: replicas work independent events, so
+        each contributes 1/latency once its pipeline is primed."""
+        return sum(1e9 / i.latency_ns for i in self.instances)
+
+    def validate(self) -> List[str]:
+        """Structural legality check; returns a list of violations (empty
+        when the schedule is legal). Checks grid bounds, pairwise bounding-
+        box disjointness, the shared PLIO budget, and that every instance
+        kept the cascade links of its standalone design."""
+        errs: List[str] = []
+        boxes = [i.bbox for i in self.instances]
+        for inst, box in zip(self.instances, boxes):
+            if not (0 <= box.r0 and box.r1 <= self.rows
+                    and 0 <= box.c0 and box.c1 <= self.cols):
+                errs.append(f"{inst.tenant}#{inst.replica}: out of bounds {box}")
+        for a in range(len(boxes)):
+            for b in range(a + 1, len(boxes)):
+                if boxes[a].overlaps(boxes[b]):
+                    ia, ib = self.instances[a], self.instances[b]
+                    errs.append(f"{ia.tenant}#{ia.replica} overlaps "
+                                f"{ib.tenant}#{ib.replica}")
+        if self.plio_ports_used > self.plio:
+            errs.append(f"PLIO over budget: {self.plio_ports_used} > {self.plio}")
+        for inst in self.instances:
+            if (inst.placement.cascade_links()
+                    != inst.design.placement.cascade_links()):
+                errs.append(f"{inst.tenant}#{inst.replica}: cascade links "
+                            f"changed by translation")
+        return errs
+
+    def summary(self) -> dict:
+        tenants = {t: len(v) for t, v in self.per_tenant().items()}
+        return {"instances": len(self.instances), "tenants": tenants,
+                "tiles": self.total_tiles,
+                "utilization": round(self.utilization, 4),
+                "plio_ports": self.plio_ports_used,
+                "modeled_eps": self.throughput_eps()}
+
+
+def _normalized(pl: Placement) -> Placement:
+    """Translate a placement so its bounding box sits at (0, 0)."""
+    box = pl.bounding_box()
+    if box.r0 == 0 and box.c0 == 0:
+        return pl
+    return pl.translated(-box.r0, -box.c0)
+
+
+class _Packer:
+    """Incremental bottom-left bounding-box packer over one occupancy grid.
+
+    Mirrors the paper's intra-model placement discipline one level up:
+    each added instance takes the free (row, col) anchor with the minimum
+    row index, then minimum column index, that fits its whole bounding box.
+    """
+
+    def __init__(self, rows: int, cols: int, plio: int):
+        self.rows, self.cols, self.plio = rows, cols, plio
+        self._occ = [[False] * cols for _ in range(rows)]
+        self._instances: List[Instance] = []
+        self._ports_used = 0
+        self._counts: Dict[str, int] = {}
+
+    def add(self, tenant: str, design: DSEResult) -> bool:
+        """Try to place one more instance; False (state unchanged) if the
+        bounding box does not fit or the shared PLIO budget is exceeded."""
+        ports = design.mapping.plio_ports_needed()
+        if self._ports_used + ports > self.plio:
+            return False
+        base = _normalized(design.placement)
+        box = base.bounding_box()
+        anchor = find_free_anchor(self._occ, box.h, box.w)
+        if anchor is None:
+            return False
+        r0, c0 = anchor
+        mark_occupied(self._occ, Rect(r0, c0, box.h, box.w))
+        self._ports_used += ports
+        idx = self._counts.get(tenant, 0)
+        self._counts[tenant] = idx + 1
+        self._instances.append(
+            Instance(tenant=tenant, replica=idx, design=design,
+                     placement=base.translated(r0, c0), offset=(r0, c0)))
+        return True
+
+    def schedule(self) -> ArraySchedule:
+        return ArraySchedule(instances=tuple(self._instances), rows=self.rows,
+                             cols=self.cols, plio=self.plio)
+
+
+def pack(designs: Sequence[Tuple[str, DSEResult]], *,
+         rows: int = aie_arch.ARRAY_ROWS,
+         cols: int = aie_arch.ARRAY_COLS,
+         plio: int = aie_arch.PLIO_PORTS) -> Optional[ArraySchedule]:
+    """Pack instances (tenant-name, standalone design) onto the shared grid.
+
+    Instances are placed in the given order with bottom-left bounding-box
+    packing; the first instance therefore lands at offset (0, 0), so packing
+    a single instance reproduces the standalone §5.2 placement exactly.
+
+    Returns None when any instance does not fit (tiles/geometry) or the
+    shared PLIO budget is exceeded.
+    """
+    pk = _Packer(rows, cols, plio)
+    for tenant, design in designs:
+        if not pk.add(tenant, design):
+            return None
+    return pk.schedule()
+
+
+def pack_replicas(design: DSEResult, replicas: int, *,
+                  tenant: Optional[str] = None,
+                  rows: int = aie_arch.ARRAY_ROWS,
+                  cols: int = aie_arch.ARRAY_COLS,
+                  plio: int = aie_arch.PLIO_PORTS) -> Optional[ArraySchedule]:
+    """Pack ``replicas`` copies of one design; None if they do not fit."""
+    name = tenant or design.model.name
+    return pack([(name, design)] * replicas, rows=rows, cols=cols, plio=plio)
+
+
+def pack_max_replicas(design: DSEResult, *,
+                      tenant: Optional[str] = None,
+                      rows: int = aie_arch.ARRAY_ROWS,
+                      cols: int = aie_arch.ARRAY_COLS,
+                      plio: int = aie_arch.PLIO_PORTS,
+                      cap: Optional[int] = None
+                      ) -> Optional[ArraySchedule]:
+    """Greedily pack replicas of one design until the grid or the shared
+    PLIO budget refuses the next one; None if even one replica does not
+    fit. Incremental (one occupancy grid, one pass) — bottom-left packing
+    never benefits from removing an earlier replica, so greedy is exact."""
+    name = tenant or design.model.name
+    pk = _Packer(rows, cols, plio)
+    while pk.add(name, design):
+        if cap is not None and len(pk._instances) >= cap:
+            break
+    if not pk._instances:
+        return None
+    return pk.schedule()
+
+
+def max_replicas(design: DSEResult, *,
+                 rows: int = aie_arch.ARRAY_ROWS,
+                 cols: int = aie_arch.ARRAY_COLS,
+                 plio: int = aie_arch.PLIO_PORTS,
+                 cap: Optional[int] = None) -> int:
+    """Largest R for which :func:`pack_replicas` succeeds (0 if even one
+    replica does not fit)."""
+    sched = pack_max_replicas(design, rows=rows, cols=cols, plio=plio,
+                              cap=cap)
+    return 0 if sched is None else len(sched.instances)
+
+
+# ---------------------------------------------------------------------------
+# Throughput-aware DSE
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ThroughputPoint:
+    """One point of the {latency, events/sec} frontier for a model."""
+
+    tenant: str
+    replicas: int
+    latency_ns: float
+    events_per_sec: float
+    tiles_per_replica: int
+    tiles_total: int
+    plio_ports: int
+    schedule: ArraySchedule
+
+    def as_dict(self) -> dict:
+        return {"tenant": self.tenant, "replicas": self.replicas,
+                "latency_ns": round(self.latency_ns, 2),
+                "events_per_sec": round(self.events_per_sec, 1),
+                "tiles_per_replica": self.tiles_per_replica,
+                "tiles_total": self.tiles_total,
+                "plio_ports": self.plio_ports}
+
+
+def throughput_frontier(model: ModelSpec, *,
+                        rows: int = aie_arch.ARRAY_ROWS,
+                        cols: int = aie_arch.ARRAY_COLS,
+                        plio: int = aie_arch.PLIO_PORTS,
+                        p: OverheadParams = OVERHEADS,
+                        top_k: int = 96,
+                        max_replicas_cap: Optional[int] = None
+                        ) -> List[ThroughputPoint]:
+    """Throughput-aware DSE: sweep the latency/replica-count trade-off.
+
+    For every design on the model's {tiles, latency} Pareto frontier, pack
+    the maximum replica count the shared array admits; keep the points that
+    are Pareto-optimal over {per-event latency, modeled events/sec}. Sorted
+    by ascending latency, so the first entry is the latency winner and the
+    last is the throughput winner.
+    """
+    points: List[ThroughputPoint] = []
+    for design in dse.search(model, rows=rows, cols=cols, plio=plio, p=p,
+                             top_k=top_k):
+        sched = pack_max_replicas(design, rows=rows, cols=cols, plio=plio,
+                                  cap=max_replicas_cap)
+        if sched is None:
+            continue
+        points.append(ThroughputPoint(
+            tenant=model.name, replicas=len(sched.instances),
+            latency_ns=design.latency.total_ns,
+            events_per_sec=sched.throughput_eps(),
+            tiles_per_replica=design.mapping.total_tiles,
+            tiles_total=sched.total_tiles,
+            plio_ports=sched.plio_ports_used, schedule=sched))
+    frontier: List[ThroughputPoint] = []
+    for pt in sorted(points, key=lambda x: (x.latency_ns, -x.events_per_sec)):
+        if all(pt.events_per_sec > kept.events_per_sec for kept in frontier):
+            frontier.append(pt)
+    return frontier
+
+
+def pack_mix(mix: Sequence[Tuple[str, ModelSpec, int]], *,
+             rows: int = aie_arch.ARRAY_ROWS,
+             cols: int = aie_arch.ARRAY_COLS,
+             plio: int = aie_arch.PLIO_PORTS,
+             p: OverheadParams = OVERHEADS,
+             top_k: int = 96) -> Optional[ArraySchedule]:
+    """Schedule a heterogeneous tenant mix ``[(name, model, replicas), ...]``.
+
+    Starts every tenant at its latency-optimal design and, while the mix
+    does not fit, backs the largest-footprint tenant off to the next smaller
+    design on its {tiles, latency} frontier — trading that tenant's latency
+    for fleet feasibility. Returns None when even the smallest designs do
+    not fit together.
+    """
+    frontiers: List[List[DSEResult]] = []
+    for name, model, count in mix:
+        fr = dse.search(model, rows=rows, cols=cols, plio=plio, p=p,
+                        top_k=top_k)
+        if not fr or count < 1:
+            return None
+        frontiers.append(fr)
+    # index into each tenant's frontier (frontier is tiles-ascending;
+    # start at the latency-optimal = largest design).
+    idx = [len(fr) - 1 for fr in frontiers]
+    while True:
+        designs: List[Tuple[str, DSEResult]] = []
+        for (name, _, count), fr, i in zip(mix, frontiers, idx):
+            designs.extend([(name, fr[i])] * count)
+        # Place big boxes first for denser packing; pack() names replicas
+        # per tenant so the interleaving order does not matter.
+        designs.sort(key=lambda d: d[1].mapping.total_tiles, reverse=True)
+        sched = pack(designs, rows=rows, cols=cols, plio=plio)
+        if sched is not None:
+            return sched
+        # Back off the tenant currently using the most tiles per replica.
+        candidates = [k for k in range(len(idx)) if idx[k] > 0]
+        if not candidates:
+            return None
+        k = max(candidates,
+                key=lambda k: frontiers[k][idx[k]].mapping.total_tiles)
+        idx[k] -= 1

@@ -11,7 +11,16 @@ CPU container), and reports:
   * the Tier-A μ-ORCA DSE latency for the same network on the VEK280
     (the paper's own deployment target), with its mapping summary.
 
+Multi-tenant serving (beyond the paper — see repro.core.tenancy): with
+``--replicas N`` the model is deployed behind a ``FleetServer`` with N
+replica kernels; ``--mix a,b`` deploys several models side by side, the
+software analogue of packing tenant rectangles onto the shared AIE array.
+The driver then also reports the Tier-A modeled multi-tenant schedule
+(replica packing, shared PLIO budget, modeled events/sec).
+
     PYTHONPATH=src python -m repro.launch.serve --model deepsets-32 --events 256
+    PYTHONPATH=src python -m repro.launch.serve --replicas 4
+    PYTHONPATH=src python -m repro.launch.serve --mix deepsets-32,jsc-m --replicas 2
 """
 from __future__ import annotations
 
@@ -27,6 +36,7 @@ from repro.data import JetConfig, jet_batch
 from repro.models import deepsets as ds
 from repro.models import mlp as mlp_lib
 from repro.serve import JetServer
+from repro.serve.fleet import FleetServer, TenantSpec
 
 MODELS = {
     "jsc-m": dict(kind="mlp", M=64, F=16, nodes=[64, 32, 32, 32, 5]),
@@ -69,49 +79,50 @@ def _accuracy(fn, jc, n=2048, seed=777):
     return float((pred == y).mean())
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--model", choices=list(MODELS), default="deepsets-32")
-    ap.add_argument("--events", type=int, default=256)
-    ap.add_argument("--train-steps", type=int, default=300)
-    ap.add_argument("--mode", choices=["fused", "unfused"], default="fused")
-    args = ap.parse_args()
-    m = MODELS[args.model]
+def _prepare(name: str, *, train_steps: int, replicas: int, mode: str) -> dict:
+    """Train + quantize one model; return its TenantSpec and eval context."""
+    m = MODELS[name]
     n_classes = (m["nodes"][-1] if m["kind"] == "mlp" else m["rho"][-1])
-
     params, jc = _train(m["kind"], m["M"], m["F"], n_classes,
                         nodes=m.get("nodes"), phi=m.get("phi"),
-                        rho=m.get("rho"), steps=args.train_steps)
-
-    # --- quantize (paper §4.3.2) + accuracy cost ---------------------------
+                        rho=m.get("rho"), steps=train_steps)
     xcal, _ = jet_batch(jc, 512, 12345)
     if m["kind"] == "mlp":
         qmlp = mlp_lib.to_quantized(params, xcal)
-        f_fn = jax.jit(lambda x: jnp.mean(
-            mlp_lib.mlp_forward(params, x), axis=1))
-        server = JetServer(qmlp, mode=args.mode, interpret=True)
+        f_fn = jax.jit(lambda x: jnp.mean(mlp_lib.mlp_forward(params, x),
+                                          axis=1))
+        tenant = TenantSpec(name=name, qmlp=qmlp, mode=mode,
+                            replicas=replicas, model_spec=SPECS[name]())
         e_in = qmlp.e_in
     else:
         qphi, qrho = ds.to_quantized(params, xcal)
         f_fn = jax.jit(lambda x: ds.deepsets_forward(params, x))
-        server = JetServer(qphi, rho=qrho, agg="mean", interpret=True)
+        tenant = TenantSpec(name=name, qmlp=qphi, rho=qrho, agg="mean",
+                            mode=mode, replicas=replicas,
+                            model_spec=SPECS[name]())
         e_in = qphi.e_in
-    acc_f = _accuracy(f_fn, jc)
+    return dict(tenant=tenant, jc=jc, e_in=e_in, n_classes=n_classes,
+                acc_float=_accuracy(f_fn, jc))
 
-    # --- serve a stream of events ------------------------------------------
-    x, y = jet_batch(jc, args.events, 999)
-    xq = np.clip(np.round(x / 2.0 ** e_in), -128, 127).astype(np.int8)
+
+def _serve_single(prep: dict, args) -> None:
+    """Original single-instance deployment (one JetServer)."""
+    t = prep["tenant"]
+    server = JetServer(t.qmlp, rho=t.rho, agg=t.agg, mode=args.mode,
+                       interpret=True)
+    x, y = jet_batch(prep["jc"], args.events, 999)
+    xq = np.clip(np.round(x / 2.0 ** prep["e_in"]), -128, 127).astype(np.int8)
     t0 = time.perf_counter()
     correct = 0
     for i in range(args.events):
         out = server.infer(xq[i])
-        pred = int(np.argmax(out[..., :n_classes]))
+        pred = int(np.argmax(out[..., :prep["n_classes"]]))
         correct += int(pred == y[i])
     wall = time.perf_counter() - t0
     acc_q = correct / args.events
     server.close()
 
-    print(f"\n[serve] {args.model}: float acc {acc_f:.3f}, "
+    print(f"\n[serve] {t.name}: float acc {prep['acc_float']:.3f}, "
           f"INT8 acc {acc_q:.3f}")
     print(f"[serve] measured (CPU interpret): "
           f"p50 {server.stats.percentile(50):.0f} us, "
@@ -122,10 +133,90 @@ def main() -> None:
           f" vs per-layer {mdl['unfused_us']:.2f} us"
           f" ({mdl['speedup']:.2f}x from cascade-analogue fusion)")
 
-    spec = SPECS[args.model]()
+    spec = SPECS[t.name]()
     r = dse.explore(spec)
     print(f"[serve] Tier-A μ-ORCA DSE on VEK280: {r.latency_ns:.0f} ns "
           f"({r.latency_ns / 1e3:.2f} us) — {r.summary()}")
+
+
+def _serve_fleet(preps: dict, args) -> None:
+    """Multi-tenant deployment: FleetServer over R replicas per tenant."""
+    fleet = FleetServer([p["tenant"] for p in preps.values()],
+                        policy=args.policy, interpret=True)
+    print(f"\n[fleet] {fleet.num_replicas} replicas across "
+          f"{len(preps)} tenant(s), policy={args.policy}")
+    for name, prep in preps.items():
+        x, y = jet_batch(prep["jc"], args.events, 999)
+        xq = np.clip(np.round(x / 2.0 ** prep["e_in"]), -128,
+                     127).astype(np.int8)
+        # Submit the whole stream before waiting so replicas actually run
+        # concurrently (blocking per-event infer() would serialize the fleet
+        # and measure single-server throughput).
+        reqs = [fleet.submit(xq[i], tenant=name) for i in range(args.events)]
+        correct = 0
+        for i, req in enumerate(reqs):
+            if not req.event.wait(120):
+                raise TimeoutError(f"event {i} for tenant {name} timed out")
+            pred = int(np.argmax(req.result[..., :prep["n_classes"]]))
+            correct += int(pred == y[i])
+        acc_q = correct / args.events
+        st = fleet.stats(name)
+        counts = fleet.replica_counts(name)
+        print(f"[fleet] {name}: float acc {prep['acc_float']:.3f}, "
+              f"INT8 acc {acc_q:.3f}")
+        print(f"[fleet] {name}: measured p50 {st.percentile(50):.0f} us, "
+              f"p99 {st.percentile(99):.0f} us, "
+              f"{st.throughput_eps():.0f} events/s over "
+              f"{len(counts)} replicas (dispatched {counts}, "
+              f"total {sum(counts)})")
+    modeled = fleet.modeled_throughput()
+    fleet.close()
+    for name, m in modeled.items():
+        if name == "_fleet":
+            print(f"[fleet] Tier-A schedule on VEK280: {m['instances']} "
+                  f"instances, {m['tiles']} tiles "
+                  f"({100 * m['utilization']:.0f}% of array), "
+                  f"{m['plio_ports']} PLIO ports, "
+                  f"{m['modeled_eps'] / 1e6:.2f} Meps modeled")
+        else:
+            print(f"[fleet] Tier-A {name}: {m['replicas']} replicas @ "
+                  f"{m['latency_ns']:.0f} ns -> "
+                  f"{m['events_per_sec'] / 1e6:.2f} Meps "
+                  f"(feasible={m['feasible']})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=list(MODELS), default="deepsets-32")
+    ap.add_argument("--mix", type=str, default=None,
+                    help="comma-separated model names served side by side "
+                         "(overrides --model)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica kernels per tenant (>1 => FleetServer)")
+    ap.add_argument("--policy", choices=["rr", "least_loaded"],
+                    default="least_loaded")
+    ap.add_argument("--events", type=int, default=256)
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--mode", choices=["fused", "unfused"], default="fused")
+    args = ap.parse_args()
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+
+    names = ([s.strip() for s in args.mix.split(",") if s.strip()]
+             if args.mix else [args.model])
+    for n in names:
+        if n not in MODELS:
+            ap.error(f"unknown model {n!r} (choices: {list(MODELS)})")
+    if len(set(names)) != len(names):
+        ap.error(f"--mix has duplicate model names: {names}")
+
+    preps = {n: _prepare(n, train_steps=args.train_steps,
+                         replicas=args.replicas, mode=args.mode)
+             for n in names}
+    if len(names) == 1 and args.replicas == 1:
+        _serve_single(preps[names[0]], args)
+    else:
+        _serve_fleet(preps, args)
 
 
 if __name__ == "__main__":

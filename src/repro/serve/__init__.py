@@ -37,13 +37,39 @@ from repro.kernels.cascade_mlp import (cascade_mlp, cascade_mlp_ref, deepsets,
 class ServeStats:
     latencies_us: List[float] = dataclasses.field(default_factory=list)
     batch_sizes: List[int] = dataclasses.field(default_factory=list)
+    t_first_submit: Optional[float] = None
+    t_last_done: Optional[float] = None
+
+    def record(self, t_submit: float, t_done: float) -> None:
+        """Record one completed event and extend the serving window."""
+        self.latencies_us.append((t_done - t_submit) * 1e6)
+        if self.t_first_submit is None or t_submit < self.t_first_submit:
+            self.t_first_submit = t_submit
+        if self.t_last_done is None or t_done > self.t_last_done:
+            self.t_last_done = t_done
 
     def percentile(self, p: float) -> float:
-        return float(np.percentile(self.latencies_us, p)) if self.latencies_us else 0.0
+        if not self.latencies_us:
+            return 0.0
+        arr = np.asarray(self.latencies_us)
+        # Interpolated tail percentiles under-report on small samples (p99 of
+        # 4 events would land below the observed max); once fewer than one
+        # sample sits above the requested rank, report the observed max.
+        if p >= 50.0 and arr.size * (100.0 - p) < 100.0:
+            return float(arr.max())
+        return float(np.percentile(arr, p))
+
+    def throughput_eps(self) -> float:
+        """Measured events/sec over the first-submit .. last-done window."""
+        if self.t_first_submit is None or self.t_last_done is None:
+            return 0.0
+        span = self.t_last_done - self.t_first_submit
+        return len(self.latencies_us) / span if span > 0 else 0.0
 
     def summary(self) -> dict:
         return {"n": len(self.latencies_us),
                 "p50_us": self.percentile(50), "p99_us": self.percentile(99),
+                "throughput_eps": self.throughput_eps(),
                 "mean_batch": (float(np.mean(self.batch_sizes))
                                if self.batch_sizes else 0.0)}
 
@@ -149,7 +175,7 @@ class JetServer:
             t_done = time.perf_counter()
             for i, r in enumerate(batch):
                 r.result = out[i]
-                self.stats.latencies_us.append((t_done - r.t_submit) * 1e6)
+                self.stats.record(r.t_submit, t_done)
                 r.event.set()
             self.stats.batch_sizes.append(len(batch))
 

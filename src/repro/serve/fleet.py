@@ -1,0 +1,202 @@
+"""Fleet serving engine: dispatch events across R compiled replicas.
+
+Runtime counterpart of the Tier-A multi-tenant scheduler
+(:mod:`repro.core.tenancy`). Where :class:`repro.serve.JetServer` is one
+μ-ORCA instance (one fused kernel + one micro-batching loop), the
+:class:`FleetServer` is the whole array: every tenant (model) gets R replica
+servers, each with its own compiled kernel, batching window, and worker
+thread — the software analogue of R disjoint rectangles on the AIE grid.
+Incoming events are dispatched round-robin or least-loaded across the
+tenant's replicas, multiplying throughput at constant per-event latency,
+exactly the trade the spatial packer makes in tiles.
+
+The fleet reports *measured* wall-clock percentiles and events/sec (merged
+across replicas, plus per-replica dispatch accounting) side by side with the
+*modeled* Tier-A numbers for the same replica count on the VEK280, so the
+interpret-mode CPU run and the analytical hardware story stay comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import dse, tenancy
+from repro.core.layerspec import ModelSpec
+from repro.quant import QuantizedMLP
+from repro.serve import JetServer, ServeStats, _Request
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One model deployed on the fleet with ``replicas`` independent copies.
+
+    ``model_spec`` (the Tier-A :class:`ModelSpec`) is optional; when given,
+    :meth:`FleetServer.modeled_throughput` packs the same replica count onto
+    the modeled VEK280 array for the hardware-side comparison.
+    """
+
+    name: str
+    qmlp: QuantizedMLP
+    rho: Optional[QuantizedMLP] = None
+    agg: str = "mean"
+    mode: str = "fused"
+    replicas: int = 1
+    model_spec: Optional[ModelSpec] = None
+
+
+class FleetServer:
+    """Multi-replica, multi-tenant inference fleet.
+
+    ``policy``: 'rr' (round-robin) or 'least_loaded' (shortest replica queue,
+    ties broken by fewest dispatches).
+    """
+
+    def __init__(self, tenants: Sequence[TenantSpec], *,
+                 policy: str = "least_loaded",
+                 max_batch: int = 64,
+                 window_us: float = 200.0,
+                 interpret: bool = True):
+        if policy not in ("rr", "least_loaded"):
+            raise ValueError(f"unknown dispatch policy {policy!r}")
+        if not tenants:
+            raise ValueError("at least one tenant required")
+        self.policy = policy
+        self.tenants: Dict[str, TenantSpec] = {}
+        self._servers: Dict[str, List[JetServer]] = {}
+        self._dispatched: Dict[str, List[int]] = {}
+        self._rr: Dict[str, int] = {}
+        self._default = tenants[0].name
+        # Validate every spec BEFORE building any JetServer: each server
+        # starts a worker thread, and a mid-construction raise would leak
+        # threads with no handle left to close() them.
+        seen = set()
+        for t in tenants:
+            if t.name in seen:
+                raise ValueError(f"duplicate tenant {t.name!r}")
+            if t.replicas < 1:
+                raise ValueError(f"tenant {t.name!r}: replicas must be >= 1")
+            seen.add(t.name)
+        for t in tenants:
+            self.tenants[t.name] = t
+            self._servers[t.name] = [
+                JetServer(t.qmlp, rho=t.rho, agg=t.agg, mode=t.mode,
+                          max_batch=max_batch, window_us=window_us,
+                          interpret=interpret)
+                for _ in range(t.replicas)]
+            self._dispatched[t.name] = [0] * t.replicas
+            self._rr[t.name] = 0
+
+    # -- dispatch -------------------------------------------------------------
+    def _pick(self, tenant: str) -> int:
+        servers = self._servers[tenant]
+        if self.policy == "rr":
+            i = self._rr[tenant]
+            self._rr[tenant] = (i + 1) % len(servers)
+            return i
+        return min(range(len(servers)),
+                   key=lambda i: (servers[i]._q.qsize(),
+                                  self._dispatched[tenant][i]))
+
+    def submit(self, x: np.ndarray, tenant: Optional[str] = None) -> _Request:
+        name = tenant or self._default
+        if name not in self._servers:
+            raise KeyError(f"unknown tenant {name!r}")
+        i = self._pick(name)
+        self._dispatched[name][i] += 1
+        return self._servers[name][i].submit(x)
+
+    def infer(self, x: np.ndarray, tenant: Optional[str] = None,
+              timeout: float = 30.0) -> np.ndarray:
+        req = self.submit(x, tenant)
+        if not req.event.wait(timeout):
+            raise TimeoutError("fleet inference timed out")
+        return req.result
+
+    def close(self) -> None:
+        for servers in self._servers.values():
+            for s in servers:
+                s.close()
+
+    # -- measured stats -------------------------------------------------------
+    @property
+    def num_replicas(self) -> int:
+        return sum(len(s) for s in self._servers.values())
+
+    def replica_counts(self, tenant: Optional[str] = None) -> List[int]:
+        """Events dispatched per replica; Σ counts == events submitted.
+
+        With ``tenant`` the list covers that tenant's replicas; with None it
+        covers every replica in the fleet (tenant declaration order), so the
+        total always matches ``stats(tenant).summary()['n']`` for the same
+        argument."""
+        if tenant is not None:
+            return list(self._dispatched[tenant])
+        return [c for name in self._servers for c in self._dispatched[name]]
+
+    def stats(self, tenant: Optional[str] = None) -> ServeStats:
+        """Merged ServeStats across a tenant's replicas (or the whole fleet
+        when ``tenant`` is None and there is more than one tenant)."""
+        names = [tenant] if tenant else list(self._servers)
+        replicas = [s for name in names for s in self._servers[name]]
+        merged = ServeStats()
+        for s in replicas:
+            merged.latencies_us.extend(s.stats.latencies_us)
+            merged.batch_sizes.extend(s.stats.batch_sizes)
+        firsts = [s.stats.t_first_submit for s in replicas
+                  if s.stats.t_first_submit is not None]
+        lasts = [s.stats.t_last_done for s in replicas
+                 if s.stats.t_last_done is not None]
+        merged.t_first_submit = min(firsts) if firsts else None
+        merged.t_last_done = max(lasts) if lasts else None
+        return merged
+
+    def summary(self) -> dict:
+        per_tenant = {}
+        for name, servers in self._servers.items():
+            s = self.stats(name).summary()
+            s["replicas"] = len(servers)
+            s["dispatched"] = list(self._dispatched[name])
+            per_tenant[name] = s
+        fleet = self.stats().summary()
+        fleet["replicas"] = self.num_replicas
+        return {"fleet": fleet, "tenants": per_tenant}
+
+    # -- Tier-A modeled throughput on the VEK280 ------------------------------
+    def modeled_throughput(self) -> dict:
+        """Pack each tenant's deployed replica count onto the modeled array.
+
+        Schedules the fleet's tenant mix with :func:`repro.core.tenancy.
+        pack_mix` (which starts at every tenant's latency-optimal §5.2 design
+        and backs off along the {tiles, latency} frontier until the mix
+        fits), then reports per-tenant modeled {latency_ns, events_per_sec,
+        tiles}. ``feasible`` is False only when even the smallest designs do
+        not fit the 304-tile grid / shared PLIO budget at the deployed
+        replica counts. Tenants without a ``model_spec`` are skipped.
+        """
+        mix = [(name, t.model_spec, t.replicas)
+               for name, t in self.tenants.items() if t.model_spec is not None]
+        if not mix:
+            return {}
+        out: Dict[str, dict] = {}
+        sched = tenancy.pack_mix(mix)
+        if sched is None:
+            for name, spec, r in mix:
+                best = dse.explore(spec)
+                lat_ns = best.latency.total_ns if best else float("nan")
+                out[name] = {"replicas": r, "latency_ns": lat_ns,
+                             "events_per_sec": (r * 1e9 / lat_ns) if best else 0.0,
+                             "feasible": False}
+            return out
+        for name, insts in sched.per_tenant().items():
+            lat_ns = max(i.latency_ns for i in insts)
+            out[name] = {
+                "replicas": len(insts),
+                "latency_ns": lat_ns,
+                "events_per_sec": sum(1e9 / i.latency_ns for i in insts),
+                "tiles": sum(i.tiles for i in insts),
+                "feasible": True,
+            }
+        out["_fleet"] = sched.summary()
+        return out

@@ -1,0 +1,159 @@
+"""Fleet serving engine (repro.serve.fleet): dispatch policies, replica
+accounting, merged stats, and the ServeStats edge-case fixes."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import JetConfig, jet_batch
+from repro.models import mlp as mlp_lib
+from repro.serve import ServeStats
+from repro.serve.fleet import FleetServer, TenantSpec
+
+
+@pytest.fixture(scope="module")
+def qmlp():
+    jc = JetConfig(n_particles=16, n_features=8, n_classes=5, seed=0)
+    params = mlp_lib.mlp_init(jax.random.key(0), 8, [16, 16, 5])
+    xcal, _ = jet_batch(jc, 64, 1)
+    return mlp_lib.to_quantized(params, xcal), jc
+
+
+def _events(jc, n, e_in, seed=7):
+    x, _ = jet_batch(jc, n, seed)
+    return np.clip(np.round(x / 2.0 ** e_in), -128, 127).astype(np.int8)
+
+
+class TestServeStats:
+    def test_empty(self):
+        s = ServeStats()
+        assert s.percentile(99) == 0.0
+        assert s.throughput_eps() == 0.0
+        assert s.summary()["throughput_eps"] == 0.0
+
+    def test_small_sample_tail_is_max(self):
+        s = ServeStats()
+        for lat in (10.0, 20.0, 30.0, 1000.0):
+            s.latencies_us.append(lat)
+        # 4 samples: interpolated p99 would sit below the observed max
+        assert s.percentile(99) == 1000.0
+        assert s.percentile(50) == pytest.approx(25.0)
+
+    def test_large_sample_tail_interpolates(self):
+        s = ServeStats()
+        s.latencies_us.extend(float(i) for i in range(1, 202))
+        assert s.percentile(99) < 201.0
+        assert s.percentile(99) > 195.0
+
+    def test_record_window_and_throughput(self):
+        s = ServeStats()
+        t0 = time.perf_counter()
+        for i in range(10):
+            s.record(t0 + i * 0.01, t0 + i * 0.01 + 0.005)
+        assert s.t_first_submit == pytest.approx(t0)
+        assert s.t_last_done == pytest.approx(t0 + 0.095)
+        assert s.throughput_eps() == pytest.approx(10 / 0.095, rel=1e-6)
+        assert s.summary()["throughput_eps"] > 0
+
+
+class TestFleetServer:
+    def test_round_robin_accounting(self, qmlp):
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=3)], policy="rr")
+        try:
+            xs = _events(jc, 12, q.e_in)
+            for i in range(12):
+                fleet.infer(xs[i])
+            counts = fleet.replica_counts("m")
+            assert counts == [4, 4, 4]
+        finally:
+            fleet.close()
+
+    def test_least_loaded_total_accounting(self, qmlp):
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=4)], policy="least_loaded")
+        try:
+            xs = _events(jc, 20, q.e_in)
+            reqs = [fleet.submit(xs[i]) for i in range(20)]
+            for r in reqs:
+                assert r.event.wait(30)
+            counts = fleet.replica_counts("m")
+            assert sum(counts) == 20
+            assert len(counts) == 4
+        finally:
+            fleet.close()
+
+    def test_results_match_single_server(self, qmlp):
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=2)])
+        single = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                         replicas=1)])
+        try:
+            xs = _events(jc, 6, q.e_in)
+            for i in range(6):
+                a = fleet.infer(xs[i])
+                b = single.infer(xs[i])
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        finally:
+            fleet.close()
+            single.close()
+
+    def test_merged_stats_and_summary(self, qmlp):
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=2)])
+        try:
+            xs = _events(jc, 8, q.e_in)
+            for i in range(8):
+                fleet.infer(xs[i])
+            st = fleet.stats("m")
+            assert len(st.latencies_us) == 8
+            assert st.percentile(50) > 0
+            assert st.throughput_eps() > 0
+            s = fleet.summary()
+            assert s["fleet"]["n"] == 8
+            assert s["fleet"]["replicas"] == 2
+            assert s["tenants"]["m"]["dispatched"] and \
+                sum(s["tenants"]["m"]["dispatched"]) == 8
+        finally:
+            fleet.close()
+
+    def test_multi_tenant_routing(self, qmlp):
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="a", qmlp=q, mode="ref",
+                                        replicas=1),
+                             TenantSpec(name="b", qmlp=q, mode="ref",
+                                        replicas=2)])
+        try:
+            xs = _events(jc, 6, q.e_in)
+            for i in range(4):
+                fleet.infer(xs[i], tenant="a")
+            for i in range(6):
+                fleet.infer(xs[i], tenant="b")
+            assert sum(fleet.replica_counts("a")) == 4
+            assert sum(fleet.replica_counts("b")) == 6
+            # tenant=None covers the whole fleet, matching stats(None)
+            assert sum(fleet.replica_counts()) == 10
+            assert len(fleet.replica_counts()) == 3
+            assert fleet.stats().summary()["n"] == 10
+            assert fleet.num_replicas == 3
+            with pytest.raises(KeyError):
+                fleet.submit(xs[0], tenant="nope")
+        finally:
+            fleet.close()
+
+    def test_bad_args(self, qmlp):
+        q, _ = qmlp
+        with pytest.raises(ValueError):
+            FleetServer([])
+        with pytest.raises(ValueError):
+            FleetServer([TenantSpec(name="m", qmlp=q, replicas=0)])
+        with pytest.raises(ValueError):
+            FleetServer([TenantSpec(name="m", qmlp=q)], policy="magic")
+        with pytest.raises(ValueError):
+            FleetServer([TenantSpec(name="m", qmlp=q),
+                         TenantSpec(name="m", qmlp=q)])

@@ -1,0 +1,140 @@
+"""Multi-tenant array scheduler (repro.core.tenancy): packing invariants,
+shared PLIO budget, cascade preservation, and the throughput-aware DSE."""
+import pytest
+
+from repro.core import aie_arch, dse, layerspec, perfmodel, tenancy
+
+
+@pytest.fixture(scope="module")
+def ds32_best():
+    r = dse.explore(layerspec.deepsets_32())
+    assert r is not None
+    return r
+
+
+@pytest.fixture(scope="module")
+def ds32_frontier():
+    fr = dse.search(layerspec.deepsets_32())
+    assert fr
+    return fr
+
+
+class TestSearchFrontier:
+    def test_frontier_is_pareto(self, ds32_frontier):
+        tiles = [d.mapping.total_tiles for d in ds32_frontier]
+        lats = [d.latency.total for d in ds32_frontier]
+        assert tiles == sorted(tiles)
+        assert lats == sorted(lats, reverse=True)
+        assert len(set(tiles)) == len(tiles)
+
+    def test_frontier_contains_explore_best(self, ds32_frontier, ds32_best):
+        assert ds32_frontier[-1].latency.total == pytest.approx(
+            ds32_best.latency.total)
+
+    def test_every_design_fits(self, ds32_frontier):
+        for d in ds32_frontier:
+            assert d.mapping.fits()
+            assert d.placement is not None
+
+
+class TestPacking:
+    def test_r1_reproduces_single_place(self, ds32_best):
+        sched = tenancy.pack_replicas(ds32_best, 1)
+        assert sched is not None and len(sched.instances) == 1
+        inst = sched.instances[0]
+        assert inst.offset == (0, 0)
+        assert inst.placement.rects == ds32_best.placement.rects
+
+    def test_replicas_never_overlap(self, ds32_best):
+        r = tenancy.max_replicas(ds32_best)
+        assert r >= 2
+        sched = tenancy.pack_replicas(ds32_best, r)
+        seen = set()
+        for inst in sched.instances:
+            for rect in inst.placement.rects:
+                for t in rect.tiles():
+                    assert t not in seen, f"tile {t} placed twice"
+                    assert 0 <= t[0] < aie_arch.ARRAY_ROWS
+                    assert 0 <= t[1] < aie_arch.ARRAY_COLS
+                    seen.add(t)
+        assert sched.validate() == []
+
+    def test_cascade_adjacency_preserved(self, ds32_best):
+        sched = tenancy.pack_replicas(ds32_best, 3)
+        assert sched is not None
+        ref_links = ds32_best.placement.cascade_links()
+        ref_lat = ds32_best.latency.total
+        for inst in sched.instances:
+            assert inst.placement.cascade_links() == ref_links
+            # translation must not change the modeled latency at all
+            lat = perfmodel.end_to_end_cycles(inst.placement).total
+            assert lat == pytest.approx(ref_lat)
+
+    def test_shared_plio_budget_enforced(self, ds32_best):
+        ports = ds32_best.mapping.plio_ports_needed()
+        # a budget of exactly 2 instances' worth admits 2, not 3
+        budget = 2 * ports
+        assert tenancy.pack_replicas(ds32_best, 2, plio=budget) is not None
+        assert tenancy.pack_replicas(ds32_best, 3, plio=budget) is None
+        assert tenancy.max_replicas(ds32_best, plio=budget) == 2
+
+    def test_does_not_fit_returns_none(self, ds32_best):
+        box = ds32_best.placement.bounding_box()
+        assert tenancy.pack_replicas(ds32_best, 1, rows=box.h,
+                                     cols=box.w - 1) is None
+
+    def test_validate_flags_overlap(self, ds32_best):
+        good = tenancy.pack_replicas(ds32_best, 2)
+        # forge a schedule where both instances sit at the same offset
+        bad = tenancy.ArraySchedule(
+            instances=(good.instances[0],
+                       tenancy.Instance(tenant=good.instances[1].tenant,
+                                        replica=1, design=ds32_best,
+                                        placement=good.instances[0].placement,
+                                        offset=good.instances[0].offset)),
+            rows=good.rows, cols=good.cols, plio=good.plio)
+        assert any("overlaps" in e for e in bad.validate())
+
+
+class TestThroughputDSE:
+    def test_frontier_monotone_and_valid(self):
+        fr = tenancy.throughput_frontier(layerspec.deepsets_32())
+        assert fr
+        lats = [pt.latency_ns for pt in fr]
+        eps = [pt.events_per_sec for pt in fr]
+        assert lats == sorted(lats)
+        assert eps == sorted(eps)
+        for pt in fr:
+            assert pt.schedule.validate() == []
+            assert len(pt.schedule.instances) == pt.replicas
+            assert pt.events_per_sec == pytest.approx(
+                pt.replicas * 1e9 / pt.latency_ns)
+
+    def test_iso_latency_speedup_at_least_2x(self, ds32_best):
+        """Acceptance: >= 2x modeled events/sec over the single-replica
+        deployment at unchanged per-event Tier-A latency."""
+        fr = tenancy.throughput_frontier(layerspec.deepsets_32())
+        single_lat = ds32_best.latency.total_ns
+        single_eps = 1e9 / single_lat
+        at_lat = [pt for pt in fr if pt.latency_ns <= single_lat + 1e-6]
+        assert at_lat, "no frontier point at the single-instance latency"
+        best = max(at_lat, key=lambda pt: pt.events_per_sec)
+        assert best.events_per_sec >= 2.0 * single_eps
+
+    def test_pack_mix(self):
+        sched = tenancy.pack_mix([
+            ("ds32", layerspec.deepsets_32(), 2),
+            ("jsc-m", layerspec.jsc_m(), 2)])
+        assert sched is not None
+        assert sched.validate() == []
+        per = sched.per_tenant()
+        assert {t: len(v) for t, v in per.items()} == {"ds32": 2, "jsc-m": 2}
+        assert sched.plio_ports_used <= aie_arch.PLIO_PORTS
+
+    def test_pack_mix_backs_off_but_respects_counts(self):
+        # 4x JSC-M at the latency-best design (88 tiles) cannot fit; the mix
+        # scheduler must back off along the frontier, not drop replicas.
+        sched = tenancy.pack_mix([("jsc-m", layerspec.jsc_m(), 4)])
+        assert sched is not None
+        assert len(sched.instances) == 4
+        assert sched.total_tiles <= aie_arch.NUM_TILES
