@@ -8,8 +8,9 @@ import sys
 import time
 
 from . import (dse_quality, fig9_perfmodel_error, fig10_synthetic_mlp,
-               fig11_realistic, roofline_report, table2_single_aie,
-               table4_global_agg, throughput_pareto, tpu_cascade_fusion)
+               fig11_realistic, roofline_report, sim_vs_model,
+               table2_single_aie, table4_global_agg, throughput_pareto,
+               tpu_cascade_fusion)
 
 BENCHES = {
     "table2_single_aie": table2_single_aie.main,
@@ -21,6 +22,7 @@ BENCHES = {
     "dse_quality": dse_quality.main,
     "roofline_report": roofline_report.main,
     "throughput_pareto": throughput_pareto.main,
+    "sim_vs_model": sim_vs_model.main,
 }
 
 

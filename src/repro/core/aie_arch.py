@@ -54,6 +54,12 @@ MACS_PER_CYCLE_INT8: int = 256
 #: Cascade FIFO geometry (paper §4.2.3): 512-bit wide, depth 4.
 CASCADE_FIFO_DEPTH: int = 4
 
+#: PLIO streams exposed per shim column (the array interface provides ~2
+#: streams per column — see the PLIO_PORTS note above: 64 ports / 38 cols).
+#: The shim DMA of a column is shared by every tenant whose bounding box
+#: covers that column, which is what the contention model serializes.
+SHIM_STREAMS_PER_COL: int = 2
+
 
 # ---------------------------------------------------------------------------
 # Calibrated overhead constants (fit by repro.core.perfmodel.calibrate()

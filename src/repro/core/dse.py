@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import aie_arch
 from .aie_arch import OverheadParams, OVERHEADS
@@ -46,10 +46,17 @@ class DSEResult:
     latency: LatencyBreakdown
     candidates_scored: int
     dp_states: int
+    #: Tier-S simulated end-to-end cycles, filled when the design was
+    #: re-scored by the discrete-event simulator (search(rescore=...)).
+    sim_cycles: Optional[float] = None
 
     @property
     def latency_ns(self) -> float:
         return self.latency.total_ns
+
+    @property
+    def sim_latency_ns(self) -> Optional[float]:
+        return None if self.sim_cycles is None else aie_arch.ns(self.sim_cycles)
 
     @property
     def cascade_edges(self) -> int:
@@ -77,6 +84,19 @@ def _edge_cost_estimate(prev: Mapping, nxt: Mapping, *, force_dma: bool,
     n_streams = max(1, min(prev.A * prev.C, nxt.A * nxt.B))
     return dma_comm_cycles(math.ceil(data / n_streams) * n_streams, d_est,
                            n_streams=n_streams, p=p), False
+
+
+def pareto_front(items: Sequence, key: Callable) -> List:
+    """Generic 2-D Pareto filter: ``key(item) -> (primary, secondary)``,
+    both minimized. Returns items sorted by ascending primary, keeping one
+    per primary value — the one whose secondary strictly beats every kept
+    predecessor. Shared by :func:`search` and
+    :func:`repro.core.tenancy.throughput_frontier`."""
+    front: List = []
+    for it in sorted(items, key=key):
+        if all(key(it)[1] < key(kept)[1] for kept in front):
+            front.append(it)
+    return front
 
 
 def _pareto_insert(frontier: List[Tuple[int, float, tuple]], tiles: int,
@@ -229,7 +249,9 @@ def search(model: ModelSpec, *,
            force_dma: bool = False,
            max_tiles_per_layer: Optional[int] = None,
            top_k: int = 96,
-           include_plio: bool = True) -> List[DSEResult]:
+           include_plio: bool = True,
+           rescore: Optional[Callable[[DSEResult], float]] = None
+           ) -> List[DSEResult]:
     """Placement-validated Pareto frontier over {tiles, latency}.
 
     Same search as :func:`explore`, but instead of only the latency winner it
@@ -239,6 +261,14 @@ def search(model: ModelSpec, *,
     input to the multi-tenant throughput DSE (:mod:`repro.core.tenancy`):
     a design using fewer tiles admits more replicas on the shared array, so
     points that lose on single-instance latency can win on events/sec.
+
+    ``rescore`` is the Tier-S hook: a callable mapping a DSEResult to a cost
+    in cycles (e.g. ``repro.sim.run.rescorer()``, the discrete-event
+    simulated latency). When given, every top-K design is re-scored, its
+    ``sim_cycles`` field is filled, and the Pareto filter ranks designs by
+    {tiles, simulated latency} instead of the analytic estimate — designs
+    whose analytic rank survives only by ignoring execution effects drop
+    off the frontier.
     """
     r = _dp_finals(model, rows=rows, cols=cols, plio=plio, dtype=dtype, p=p,
                    force_dma=force_dma, max_tiles_per_layer=max_tiles_per_layer,
@@ -255,13 +285,13 @@ def search(model: ModelSpec, *,
             scored.append(cand)
     for cand in scored:
         cand.candidates_scored = len(scored)
-    # Pareto filter: keep designs not dominated on (tiles, latency).
-    frontier: List[DSEResult] = []
-    for cand in sorted(scored, key=lambda d: (d.mapping.total_tiles,
-                                              d.latency.total)):
-        if all(cand.latency.total < kept.latency.total for kept in frontier):
-            frontier.append(cand)
-    return frontier
+    if rescore is not None:
+        for cand in scored:
+            cand.sim_cycles = float(rescore(cand))
+    cost = ((lambda d: d.sim_cycles) if rescore is not None
+            else (lambda d: d.latency.total))
+    # Pareto filter: keep designs not dominated on (tiles, cost).
+    return pareto_front(scored, lambda d: (d.mapping.total_tiles, cost(d)))
 
 
 def _recost_all_dma(placement: Placement, *, p: OverheadParams,

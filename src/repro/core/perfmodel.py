@@ -134,6 +134,74 @@ def layer_comp_cycles(m: Mapping, *, out_cascade: bool,
 
 
 # ---------------------------------------------------------------------------
+# Per-tile occupancy decomposition of Eq. (4) (consumed by repro.sim)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerOccupancy:
+    """Eq. (4) decomposed into per-tile busy intervals.
+
+    ``spans`` holds one ``(local_row, local_col, start, dur)`` tuple per tile
+    of the layer's rectangle, with ``start`` relative to the layer's launch.
+    The makespan (``max(start + dur)``) equals :func:`layer_comp_cycles` for
+    the same arguments — the discrete-event simulator schedules these spans
+    on physical tile resources and inherits the Tier-A calibration exactly.
+    """
+
+    spans: Tuple[Tuple[int, int, float, float], ...]
+    lj: float                  #: per-j-loop cycles on the critical column
+    njl: int                   #: j loops per kernel
+
+    @property
+    def makespan(self) -> float:
+        return max(s + d for _, _, s, d in self.spans)
+
+
+def layer_occupancy(m: Mapping, *, out_cascade: bool,
+                    p: OverheadParams = OVERHEADS,
+                    ideal: bool = False) -> LayerOccupancy:
+    """Per-tile busy intervals of one layer (Eq. 4 / Table 4 decomposition).
+
+    MM layers: every row of B tiles pipelines along the intra-layer cascade;
+    column b starts ``b * L_j`` after launch (the FIFO fill skew — depth-4
+    512-bit FIFOs plus the calibrated ``l_cas`` back-pressure stall are what
+    make L_j the per-column period), and the rightmost column additionally
+    runs the non-pipelined L_o epilogue (store + bias/ReLU).
+
+    Aggregation layers: the column of A tiles chains via shared memory with a
+    per-AIE handoff of ``agg_per_aie`` cycles (Table 4 calibration).
+    """
+    l = m.layer
+    spans: List[Tuple[int, int, float, float]] = []
+    if l.kind == "agg":
+        total = agg_ours_cycles(m.A, m.H1, m.W2, p=p, ideal=ideal)
+        bm, bk, bn = _blk(m.dtype)
+        vmacs = math.ceil(m.H1 / bk) * math.ceil(m.W2 / bn)
+        dur = total if ideal else p.agg_fixed + p.agg_per_aie + vmacs
+        if ideal or dur <= 0 or m.rows == 1:
+            spans = [(r, 0, 0.0, total) for r in range(m.rows)]
+        else:
+            spans = [(r, 0, r * p.agg_per_aie, dur) for r in range(m.rows)]
+        return LayerOccupancy(spans=tuple(spans), lj=dur, njl=1)
+
+    njl = m.j_loops
+    cascaded = m.B > 1
+    lj = l_j_cycles(m.W1, cascaded=cascaded, p=p, dtype=m.dtype, ideal=ideal)
+    lo = 0.0
+    if not ideal:
+        lo = p.l_o
+        if not out_cascade:
+            lo += p.l_o_store_dma * (m.H1 * m.W2)
+        if l.bias or l.relu:
+            lo += br_overhead(m.H1, m.W2, p)
+    for lr in range(m.rows):
+        for lc in range(m.cols):
+            dur = njl * lj + (lo if lc == m.cols - 1 else 0.0)
+            spans.append((lr, lc, lc * lj, dur))
+    return LayerOccupancy(spans=tuple(spans), lj=lj, njl=njl)
+
+
+# ---------------------------------------------------------------------------
 # Eq. (5)-(6): inter-layer communication latency
 # ---------------------------------------------------------------------------
 

@@ -114,6 +114,17 @@ class Placement:
         c1 = max(r.c1 for r in self.rects)
         return Rect(r0, c0, r1 - r0, c1 - c0)
 
+    def shim_columns(self) -> Tuple[int, ...]:
+        """Array-interface columns this design loads/stores through.
+
+        PLIO enters the array through the shim DMA of the columns under the
+        design's bounding box; co-resident tenants whose boxes stack
+        vertically therefore *share* these columns — the contention the
+        Tier-S simulator and the tenancy ingest penalty model serialize.
+        """
+        box = self.bounding_box()
+        return tuple(range(box.c0, box.c1))
+
     def translated(self, dr: int, dc: int) -> "Placement":
         """Rigid translation of the whole design on the grid.
 

@@ -32,6 +32,14 @@ spatial-multi-tenancy axis:
 The serving-side counterpart is :class:`repro.serve.fleet.FleetServer`,
 which dispatches measured micro-batches across R compiled replicas and
 reports wall-clock percentiles next to these Tier-A numbers.
+
+PLIO ingest is *not* congestion-free across tenants: instances load/store
+through the shim DMA of the columns under their bounding box, and boxes
+that stack vertically share those columns. :func:`shim_transfer_cycles`
+computes each instance's per-column occupancy, :meth:`ArraySchedule.
+shim_contention` prices the serialization analytically (fluid model), and
+``throughput_frontier(contention="sim")`` measures it with the Tier-S
+discrete-event simulator (:mod:`repro.sim`).
 """
 from __future__ import annotations
 
@@ -42,7 +50,67 @@ from . import aie_arch, dse
 from .aie_arch import OverheadParams, OVERHEADS
 from .dse import DSEResult
 from .layerspec import ModelSpec
+from .perfmodel import plio_cycles
 from .placement import (Placement, Rect, find_free_anchor, mark_occupied)
+
+
+# ---------------------------------------------------------------------------
+# Shim-column ingest model (closes the congestion-free PLIO assumption)
+# ---------------------------------------------------------------------------
+
+def shim_transfer_cycles(placement: Placement, *,
+                         p: OverheadParams = OVERHEADS,
+                         streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL,
+                         ideal: bool = False
+                         ) -> Tuple[Tuple[int, ...], float, float]:
+    """Per-column PLIO occupancy of one instance, per event.
+
+    Returns ``(columns, t_in, t_out)``: the shim columns under the
+    instance's bounding box, and the cycles each column is busy for one
+    event's ingest / egress. Transfers stripe across the footprint columns
+    in parallel, but the effective port count is capped by the shim
+    bandwidth (``streams_per_col`` per column) — a design whose PLIO demand
+    exceeds its box width transfers slower than the uncapped Tier-A
+    ``plio_cycles`` term assumes. When uncapped, ``t_in``/``t_out`` equal
+    the analytic PLIO terms exactly.
+    """
+    maps = placement.model_mapping.mappings
+    first, last = maps[0], maps[-1]
+    cols = placement.shim_columns()
+    eff_in = min(first.A * first.B, streams_per_col * len(cols))
+    eff_out = min(last.A * last.C, streams_per_col * len(cols))
+    t_in = plio_cycles(first.layer.in_bytes, eff_in, p=p, ideal=ideal)
+    t_out = plio_cycles(last.layer.out_bytes, eff_out, p=p, ideal=ideal)
+    return cols, t_in, t_out
+
+
+@dataclasses.dataclass(frozen=True)
+class ShimContention:
+    """Analytic serialized-ingest report for one schedule.
+
+    Fluid approximation of the capacity-1 shim columns the Tier-S simulator
+    models exactly: each instance demands ``(t_in + t_out) / latency`` of
+    every column under its box; a column whose summed demand exceeds 1.0
+    saturates and throttles every sharer proportionally. Per-event latency
+    is unchanged (transfers still complete), only sustained events/sec drop.
+    """
+
+    column_util: Dict[int, float]       #: per shim column: Σ demand (can be > 1)
+    column_sharers: Dict[int, int]      #: per shim column: instances using it
+    factors: Tuple[float, ...]          #: per instance: throughput throttle <= 1
+    eps_free: float                     #: congestion-free Σ 1/latency
+    eps_contended: float                #: throttled Σ factor_i / latency_i
+
+    @property
+    def shared_cols(self) -> int:
+        return sum(1 for n in self.column_sharers.values() if n > 1)
+
+    @property
+    def penalty(self) -> float:
+        """Fractional events/sec lost to shim serialization (0 = none)."""
+        if self.eps_free <= 0:
+            return 0.0
+        return 1.0 - self.eps_contended / self.eps_free
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +139,11 @@ class Instance:
     @property
     def bbox(self) -> Rect:
         return self.placement.bounding_box()
+
+    @property
+    def shim_cols(self) -> Tuple[int, ...]:
+        """Shim columns this instance loads/stores through (under its box)."""
+        return self.placement.shim_columns()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,9 +174,40 @@ class ArraySchedule:
         return out
 
     def throughput_eps(self) -> float:
-        """Modeled fleet events/sec: replicas work independent events, so
-        each contributes 1/latency once its pipeline is primed."""
+        """Congestion-free modeled fleet events/sec: replicas work
+        independent events, so each contributes 1/latency once its pipeline
+        is primed. See :meth:`contended_eps` for the shim-aware figure."""
         return sum(1e9 / i.latency_ns for i in self.instances)
+
+    def shim_contention(self, *, p: OverheadParams = OVERHEADS,
+                        streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL
+                        ) -> ShimContention:
+        """Analytic serialized-ingest model over the shared shim columns."""
+        util: Dict[int, float] = {}
+        sharers: Dict[int, int] = {}
+        per_inst: List[Tuple[Tuple[int, ...], float]] = []
+        for inst in self.instances:
+            cols, t_in, t_out = shim_transfer_cycles(
+                inst.placement, p=p, streams_per_col=streams_per_col)
+            lat = aie_arch.cycles_from_ns(inst.latency_ns)
+            demand = (t_in + t_out) / lat
+            for c in cols:
+                util[c] = util.get(c, 0.0) + demand
+                sharers[c] = sharers.get(c, 0) + 1
+            per_inst.append((cols, lat))
+        factors = tuple(
+            min([1.0] + [1.0 / util[c] for c in cols if util[c] > 1.0])
+            for cols, _ in per_inst)
+        eps_free = self.throughput_eps()
+        eps_cont = sum(f * 1e9 / i.latency_ns
+                       for f, i in zip(factors, self.instances))
+        return ShimContention(column_util=util, column_sharers=sharers,
+                              factors=factors, eps_free=eps_free,
+                              eps_contended=eps_cont)
+
+    def contended_eps(self, *, p: OverheadParams = OVERHEADS) -> float:
+        """Modeled events/sec with the serialized-ingest penalty applied."""
+        return self.shim_contention(p=p).eps_contended
 
     def validate(self) -> List[str]:
         """Structural legality check; returns a list of violations (empty
@@ -133,11 +237,15 @@ class ArraySchedule:
 
     def summary(self) -> dict:
         tenants = {t: len(v) for t, v in self.per_tenant().items()}
+        sc = self.shim_contention()
         return {"instances": len(self.instances), "tenants": tenants,
                 "tiles": self.total_tiles,
                 "utilization": round(self.utilization, 4),
                 "plio_ports": self.plio_ports_used,
-                "modeled_eps": self.throughput_eps()}
+                "modeled_eps": self.throughput_eps(),
+                "modeled_eps_contended": sc.eps_contended,
+                "shim_cols_shared": sc.shared_cols,
+                "shim_penalty": round(sc.penalty, 4)}
 
 
 def _normalized(pl: Placement) -> Placement:
@@ -258,7 +366,13 @@ def max_replicas(design: DSEResult, *,
 
 @dataclasses.dataclass(frozen=True)
 class ThroughputPoint:
-    """One point of the {latency, events/sec} frontier for a model."""
+    """One point of the {latency, events/sec} frontier for a model.
+
+    ``events_per_sec`` is the congestion-free Tier-A figure (``R /
+    latency``); ``events_per_sec_contended`` applies the shim-column
+    serialized-ingest penalty — analytically by default, or measured by the
+    Tier-S simulator when the frontier was built with ``contention="sim"``.
+    """
 
     tenant: str
     replicas: int
@@ -268,11 +382,23 @@ class ThroughputPoint:
     tiles_total: int
     plio_ports: int
     schedule: ArraySchedule
+    events_per_sec_contended: float = 0.0
+    contention: str = "none"
+
+    @property
+    def contention_factor(self) -> float:
+        if self.events_per_sec <= 0:
+            return 1.0
+        return self.events_per_sec_contended / self.events_per_sec
 
     def as_dict(self) -> dict:
         return {"tenant": self.tenant, "replicas": self.replicas,
                 "latency_ns": round(self.latency_ns, 2),
                 "events_per_sec": round(self.events_per_sec, 1),
+                "events_per_sec_contended":
+                    round(self.events_per_sec_contended, 1),
+                "contention": self.contention,
+                "contention_factor": round(self.contention_factor, 4),
                 "tiles_per_replica": self.tiles_per_replica,
                 "tiles_total": self.tiles_total,
                 "plio_ports": self.plio_ports}
@@ -284,16 +410,26 @@ def throughput_frontier(model: ModelSpec, *,
                         plio: int = aie_arch.PLIO_PORTS,
                         p: OverheadParams = OVERHEADS,
                         top_k: int = 96,
-                        max_replicas_cap: Optional[int] = None
-                        ) -> List[ThroughputPoint]:
+                        max_replicas_cap: Optional[int] = None,
+                        contention: str = "analytic",
+                        sim_events: int = 8) -> List[ThroughputPoint]:
     """Throughput-aware DSE: sweep the latency/replica-count trade-off.
 
     For every design on the model's {tiles, latency} Pareto frontier, pack
     the maximum replica count the shared array admits; keep the points that
-    are Pareto-optimal over {per-event latency, modeled events/sec}. Sorted
-    by ascending latency, so the first entry is the latency winner and the
-    last is the throughput winner.
+    are Pareto-optimal over {per-event latency, modeled events/sec} — where
+    events/sec is the *contended* figure unless ``contention="none"``.
+    Sorted by ascending latency, so the first entry is the latency winner
+    and the last is the throughput winner under the selected model.
+
+    ``contention`` selects how each point's shim-aware events/sec is
+    priced: ``"none"`` keeps the congestion-free assumption, ``"analytic"``
+    (default) applies the serialized-ingest fluid model, ``"sim"`` runs the
+    Tier-S discrete-event simulator (``sim_events`` events per replica) —
+    the most faithful but slowest option.
     """
+    if contention not in ("none", "analytic", "sim"):
+        raise ValueError(f"unknown contention model {contention!r}")
     points: List[ThroughputPoint] = []
     for design in dse.search(model, rows=rows, cols=cols, plio=plio, p=p,
                              top_k=top_k):
@@ -301,18 +437,32 @@ def throughput_frontier(model: ModelSpec, *,
                                   cap=max_replicas_cap)
         if sched is None:
             continue
+        eps_free = sched.throughput_eps()
+        if contention == "sim":
+            from repro.sim.run import SimConfig, simulate_schedule
+            res = simulate_schedule(sched, p=p,
+                                    config=SimConfig(events=sim_events,
+                                                     trace=False))
+            eps_cont = res.throughput_eps()
+        elif contention == "analytic":
+            eps_cont = sched.contended_eps(p=p)
+        else:
+            eps_cont = eps_free
         points.append(ThroughputPoint(
             tenant=model.name, replicas=len(sched.instances),
             latency_ns=design.latency.total_ns,
-            events_per_sec=sched.throughput_eps(),
+            events_per_sec=eps_free,
             tiles_per_replica=design.mapping.total_tiles,
             tiles_total=sched.total_tiles,
-            plio_ports=sched.plio_ports_used, schedule=sched))
-    frontier: List[ThroughputPoint] = []
-    for pt in sorted(points, key=lambda x: (x.latency_ns, -x.events_per_sec)):
-        if all(pt.events_per_sec > kept.events_per_sec for kept in frontier):
-            frontier.append(pt)
-    return frontier
+            plio_ports=sched.plio_ports_used, schedule=sched,
+            events_per_sec_contended=eps_cont, contention=contention))
+    # Pareto over {latency, throughput} using the *requested* throughput
+    # model: once contention is priced, a packing that stacks fewer boxes
+    # per shim column can dominate one with higher congestion-free eps.
+    metric = ((lambda pt: pt.events_per_sec) if contention == "none"
+              else (lambda pt: pt.events_per_sec_contended))
+    return dse.pareto_front(points,
+                            lambda pt: (pt.latency_ns, -metric(pt)))
 
 
 def pack_mix(mix: Sequence[Tuple[str, ModelSpec, int]], *,

@@ -1,0 +1,31 @@
+"""repro.sim — discrete-event simulator of the AIE array (Tier-S).
+
+Fidelity tiers of this repo:
+
+  * **Tier-A** (:mod:`repro.core.perfmodel`): the paper's closed-form
+    Eq. (1)-(6) latency model, calibrated to Table 2 / Table 4. Congestion
+    free by construction — it scores one instance in isolation.
+  * **Tier-S** (this package): a discrete-event simulation that *executes*
+    a placed design event by event on a resource model of the 8 x 38 array
+    — per-tile compute occupancy from the Tier-A per-layer cycle model
+    (:func:`repro.core.perfmodel.layer_occupancy`), 512-bit/cycle cascade
+    FIFO edges, 32-bit/cycle DMA hops with Manhattan routing, and
+    shim-column PLIO ports that serialize when co-resident tenants share a
+    column. For a single tenant it reproduces the analytic end-to-end
+    latency; for multi-tenant schedules it prices the ingest contention the
+    analytic model ignores.
+
+Entry points: :func:`repro.sim.run.simulate_placement`,
+:func:`repro.sim.run.simulate_schedule`, :func:`repro.sim.run.rescorer`
+(the Tier-S hook for ``dse.search``), and :mod:`repro.launch.simulate`.
+"""
+from .events import Resource, Simulator, Task, TaskGraph, DeadlockError
+from .run import (SimConfig, SimResult, rescorer, simulate_placement,
+                  simulate_schedule)
+from .trace import ChromeTrace
+
+__all__ = [
+    "ChromeTrace", "DeadlockError", "Resource", "SimConfig", "SimResult",
+    "Simulator", "Task", "TaskGraph", "rescorer", "simulate_placement",
+    "simulate_schedule",
+]

@@ -1,0 +1,220 @@
+"""Minimal discrete-event engine: simulator clock, FIFO resources, task DAGs.
+
+The engine is deliberately generic — it knows nothing about AIE tiles or
+PLIO. :mod:`repro.sim.array` instantiates the resources and
+:mod:`repro.sim.run` builds the task graphs. Three primitives:
+
+  * :class:`Simulator` — a time-ordered event heap. Ties break by schedule
+    order (a monotonically increasing sequence number), so runs are fully
+    deterministic.
+  * :class:`Resource` — a capacity-k server with a FIFO wait queue. Every
+    grant/release is recorded as a busy span, which is what the trace export
+    and the occupancy invariants (no tile double-booked) consume.
+  * :class:`Task` — one activity: wait for all predecessors, wait ``delay``
+    cycles, acquire a resource (or none), stay busy ``duration`` cycles,
+    release, notify successors. A :class:`TaskGraph` runs a static DAG of
+    tasks and raises :class:`DeadlockError` when the event heap drains with
+    tasks still pending — the property tests assert this never happens for
+    valid placements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
+
+
+class DeadlockError(RuntimeError):
+    """The event heap drained while tasks were still pending."""
+
+    def __init__(self, unfinished: Sequence["Task"]):
+        self.unfinished = list(unfinished)
+        names = ", ".join(t.name for t in self.unfinished[:8])
+        more = "" if len(self.unfinished) <= 8 else f" (+{len(self.unfinished) - 8} more)"
+        super().__init__(
+            f"deadlock: {len(self.unfinished)} task(s) never completed: "
+            f"{names}{more}")
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: Callable[[], None] = dataclasses.field(compare=False)
+
+
+class Simulator:
+    """Time-ordered event loop over a float cycle clock."""
+
+    def __init__(self) -> None:
+        self.now: float = 0.0
+        self.events_run: int = 0
+        self._heap: List[_Event] = []
+        self._seq: int = 0
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        self._seq += 1
+        heapq.heappush(self._heap, _Event(self.now + delay, self._seq, fn))
+
+    def run(self, *, max_events: int = 5_000_000) -> int:
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            self.now = ev.time
+            ev.fn()
+            self.events_run += 1
+            if self.events_run > max_events:
+                raise RuntimeError(
+                    f"event budget exceeded ({max_events}) at t={self.now}")
+        return self.events_run
+
+
+class Resource:
+    """Capacity-``capacity`` server with a FIFO wait queue.
+
+    ``pid``/``tid`` name the trace lane this resource's busy spans render
+    on; ``spans`` keeps ``(task_name, start, end, bytes)`` for invariant
+    checks regardless of whether a trace recorder is attached.
+    """
+
+    def __init__(self, name: str, *, capacity: int = 1, pid: str = "",
+                 tid: str = "") -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.name = name
+        self.capacity = capacity
+        self.pid = pid or "resources"
+        self.tid = tid or name
+        self.spans: List[Tuple[str, float, float, int]] = []
+        self.waits: int = 0
+        self.wait_cycles: float = 0.0
+        self._busy: int = 0
+        self._queue: Deque["Task"] = deque()
+
+    def request(self, task: "Task") -> None:
+        if self._busy < self.capacity:
+            self._busy += 1
+            task._begin()
+        else:
+            self.waits += 1
+            self._queue.append(task)
+
+    def release(self) -> None:
+        self._busy -= 1
+        if self._queue:
+            self._busy += 1
+            self._queue.popleft()._begin()
+
+    @property
+    def busy_cycles(self) -> float:
+        return sum(e - s for _, s, e, _ in self.spans)
+
+
+class Task:
+    """One activity of the DAG. Build via :meth:`TaskGraph.task`."""
+
+    __slots__ = ("graph", "name", "duration", "resource", "delay", "bytes",
+                 "pid", "tid", "args", "start", "end", "requested_at",
+                 "_npreds", "_succs", "record")
+
+    def __init__(self, graph: "TaskGraph", name: str, *, duration: float = 0.0,
+                 resource: Optional[Resource] = None, delay: float = 0.0,
+                 bytes: int = 0, pid: Optional[str] = None,
+                 tid: Optional[str] = None, record: bool = True,
+                 args: Optional[dict] = None) -> None:
+        if duration < 0:
+            raise ValueError(f"{name}: negative duration {duration}")
+        self.graph = graph
+        self.name = name
+        self.duration = duration
+        self.resource = resource
+        self.delay = delay
+        self.bytes = bytes
+        self.pid = pid if pid is not None else (resource.pid if resource else "")
+        self.tid = tid if tid is not None else (resource.tid if resource else "")
+        self.args = args or {}
+        self.record = record
+        self.start: Optional[float] = None
+        self.end: Optional[float] = None
+        self.requested_at: Optional[float] = None
+        self._npreds = 0
+        self._succs: List["Task"] = []
+
+    @property
+    def done(self) -> bool:
+        return self.end is not None
+
+    def after(self, *preds: "Task") -> "Task":
+        for p in preds:
+            p._succs.append(self)
+            self._npreds += 1
+        return self
+
+    # -- engine callbacks ---------------------------------------------------
+    def _pred_done(self) -> None:
+        self._npreds -= 1
+        if self._npreds == 0:
+            self.graph.sim.schedule(self.delay, self._request)
+
+    def _request(self) -> None:
+        self.requested_at = self.graph.sim.now
+        if self.resource is not None:
+            self.resource.request(self)
+        else:
+            self._begin()
+
+    def _begin(self) -> None:
+        sim = self.graph.sim
+        self.start = sim.now
+        if self.resource is not None and self.requested_at is not None:
+            self.resource.wait_cycles += sim.now - self.requested_at
+        sim.schedule(self.duration, self._finish)
+
+    def _finish(self) -> None:
+        sim = self.graph.sim
+        self.end = sim.now
+        if self.resource is not None:
+            self.resource.spans.append((self.name, self.start, self.end,
+                                        self.bytes))
+            self.resource.release()
+        if self.record and self.graph.trace is not None and self.duration > 0:
+            self.graph.trace.span(self.pid, self.tid, self.name, self.start,
+                                  self.end - self.start,
+                                  args={**self.args, "bytes": self.bytes}
+                                  if self.bytes else dict(self.args))
+        for s in self._succs:
+            s._pred_done()
+
+
+class TaskGraph:
+    """A static DAG of tasks over one simulator clock."""
+
+    def __init__(self, sim: Optional[Simulator] = None, trace=None) -> None:
+        self.sim = sim or Simulator()
+        self.trace = trace
+        self.tasks: List[Task] = []
+
+    def task(self, name: str, **kw) -> Task:
+        t = Task(self, name, **kw)
+        self.tasks.append(t)
+        return t
+
+    def unfinished(self) -> List[Task]:
+        return [t for t in self.tasks if not t.done]
+
+    def run(self, *, max_events: int = 5_000_000) -> Simulator:
+        for t in self.tasks:
+            if t._npreds == 0:
+                self.sim.schedule(t.delay, t._request)
+        self.sim.run(max_events=max_events)
+        pending = self.unfinished()
+        if pending:
+            raise DeadlockError(pending)
+        return self.sim
+
+    @property
+    def makespan(self) -> float:
+        return max((t.end for t in self.tasks if t.end is not None),
+                   default=0.0)

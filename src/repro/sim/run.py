@@ -1,0 +1,339 @@
+"""Execute placed designs on the discrete-event array model (Tier-S).
+
+The task graph for one event flowing through one instance mirrors the
+Tier-A decomposition of :func:`repro.core.perfmodel.end_to_end_cycles`:
+
+    arrive -> PLIO ingest (one slice per shim column of the instance's box)
+           -> layer 0 per-tile spans (cascade-skewed, from layer_occupancy)
+           -> inter-layer edge (cascade gap / shared-mem / DMA with
+              Manhattan routing)
+           -> ... -> PLIO egress -> done
+
+Durations come from the same calibrated Eq. (1)-(6) pieces the analytic
+model sums, so a single-tenant run reproduces ``end_to_end_cycles`` — the
+Fig. 9-style sim-vs-model report in ``benchmarks/sim_vs_model.py`` checks
+this. What the simulator *adds* is resources: shim columns are capacity-1
+servers shared by every co-resident tenant whose bounding box covers them,
+so multi-tenant ingest serializes and the measured events/sec fall below
+the congestion-free ``R / latency`` the Tier-A throughput model assumes.
+
+Events within one instance are strictly serial (event e+1 arrives when
+event e completes), matching the Tier-A throughput model's non-pipelined
+``1 / latency`` per-replica rate in the uncontended case.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import aie_arch, perfmodel
+from repro.core.aie_arch import OverheadParams, OVERHEADS
+from repro.core.placement import Placement
+from repro.core.tenancy import shim_transfer_cycles
+
+from .array import ArrayResources
+from .events import Task, TaskGraph
+from .trace import ChromeTrace
+
+
+@dataclasses.dataclass
+class SimConfig:
+    """Knobs of one simulation run (all cycle quantities in AIE cycles)."""
+
+    events: int = 1                #: events to push through each instance
+    shim_contention: bool = True   #: serialize shared shim columns (Tier-S);
+                                   #: False = congestion-free counterfactual
+    shim_streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL
+    include_plio: bool = True
+    ideal: bool = False            #: zero all calibrated overheads
+    seed: Optional[int] = None     #: seeds the arrival-jitter RNG
+    jitter_cycles: float = 0.0     #: uniform [0, jitter) per-event arrival jitter
+    trace: bool = True             #: record a Chrome trace
+    max_events: int = 5_000_000    #: engine event budget (runaway guard)
+
+
+@dataclasses.dataclass
+class InstanceSim:
+    """Per-instance bookkeeping: the tasks of every event, then measurements."""
+
+    label: str
+    tenant: str
+    replica: int
+    placement: Placement
+    event_tasks: List[Dict[str, object]]
+    latencies: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_latency_cycles(self) -> float:
+        return sum(self.latencies) / len(self.latencies)
+
+    @property
+    def span_cycles(self) -> float:
+        """First arrival to last completion."""
+        first = self.event_tasks[0]["root"].end
+        last = self.event_tasks[-1]["done"].end
+        return last - first
+
+    @property
+    def events_per_sec(self) -> float:
+        return len(self.latencies) / (self.span_cycles * aie_arch.NS_PER_CYCLE
+                                      * 1e-9)
+
+
+@dataclasses.dataclass
+class SimResult:
+    graph: TaskGraph
+    arr: ArrayResources
+    instances: List[InstanceSim]
+    config: SimConfig
+    trace: Optional[ChromeTrace]
+
+    @property
+    def makespan_cycles(self) -> float:
+        return self.graph.makespan
+
+    @property
+    def latency_cycles(self) -> float:
+        """Mean per-event latency across all instances/events."""
+        lats = [l for i in self.instances for l in i.latencies]
+        return sum(lats) / len(lats)
+
+    @property
+    def latency_ns(self) -> float:
+        return aie_arch.ns(self.latency_cycles)
+
+    def throughput_eps(self) -> float:
+        return sum(i.events_per_sec for i in self.instances)
+
+    def per_instance_eps(self) -> Dict[str, float]:
+        return {i.label: i.events_per_sec for i in self.instances}
+
+    def shim_wait_cycles(self) -> float:
+        """Total cycles transfers spent queued behind other tenants."""
+        return sum(r.wait_cycles for r in self.arr.shim_resources().values())
+
+
+def _split(nbytes: int, n: int) -> List[int]:
+    """Split ``nbytes`` into ``n`` integer shares that sum exactly."""
+    base, rem = divmod(nbytes, n)
+    return [base + (1 if i < rem else 0) for i in range(n)]
+
+
+def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
+                    *, tenant: str, replica: int, n_events: int,
+                    p: OverheadParams, cfg: SimConfig,
+                    rng: random.Random) -> InstanceSim:
+    label = f"{tenant}#{replica}"
+    mm = placement.model_mapping
+    maps = mm.mappings
+    links = placement.cascade_links()
+    dists = placement.dma_distances()
+    cols, t_in, t_out = shim_transfer_cycles(
+        placement, p=p, streams_per_col=cfg.shim_streams_per_col,
+        ideal=cfg.ideal)
+    in_bytes = maps[0].layer.in_bytes
+    out_bytes = maps[-1].layer.out_bytes
+
+    prev_done: Optional[Task] = None
+    ev_tasks: List[Dict[str, object]] = []
+    for e in range(n_events):
+        ev = f"{label}.e{e}"
+        jit = rng.uniform(0.0, cfg.jitter_cycles) if cfg.jitter_cycles > 0 else 0.0
+        root = g.task(f"{ev}.arrive", delay=jit, record=False)
+        if prev_done is not None:
+            root.after(prev_done)
+        rec: Dict[str, object] = {"root": root, "ingest": [], "edges": [],
+                                  "layers": [], "egress": []}
+        cur = root
+        if cfg.include_plio:
+            ingest = [g.task(f"{ev}.load", resource=arr.shim(c, label),
+                             duration=t_in, bytes=b, args={"ev": ev}
+                             ).after(root)
+                      for c, b in zip(cols, _split(in_bytes, len(cols)))]
+            rec["ingest"] = ingest
+            cur = g.task(f"{ev}.loaded", record=False).after(*ingest)
+        for i, m in enumerate(maps):
+            out_cas = i < len(links) and links[i]
+            occ = perfmodel.layer_occupancy(m, out_cascade=out_cas, p=p,
+                                            ideal=cfg.ideal)
+            rect = placement.rects[i]
+            lname = m.layer.name or f"L{i}"
+            spans = [g.task(f"{ev}.{lname}",
+                            resource=arr.tile(rect.r0 + lr, rect.c0 + lc),
+                            delay=s, duration=d, args={"ev": ev}).after(cur)
+                     for lr, lc, s, d in occ.spans]
+            rec["layers"].append(spans)
+            ldone = g.task(f"{ev}.{lname}.done", record=False).after(*spans)
+            if i == len(maps) - 1:
+                cur = ldone
+                continue
+            # inter-layer edge, mirroring perfmodel.end_to_end_cycles
+            nxt = maps[i + 1]
+            data = m.layer.out_bytes
+            if links[i]:
+                kind = "sharedmem" if nxt.layer.kind == "agg" else "cascade"
+                dur = perfmodel.cascade_comm_cycles(p=p, ideal=cfg.ideal)
+            else:
+                kind = "dma"
+                n_streams = max(1, min(m.A * m.C, nxt.A * nxt.B))
+                dur = perfmodel.dma_comm_cycles(
+                    math.ceil(data / n_streams) * n_streams, dists[i],
+                    n_streams=n_streams, p=p, ideal=cfg.ideal)
+            edge = g.task(f"{ev}.{lname}>{kind}",
+                          resource=arr.edge(f"{label}.L{i}>L{i + 1}", kind),
+                          duration=dur, bytes=data, args={"ev": ev}
+                          ).after(ldone)
+            rec["edges"].append((kind, edge, data))
+            cur = edge
+        if cfg.include_plio:
+            egress = [g.task(f"{ev}.store", resource=arr.shim(c, label),
+                             duration=t_out, bytes=b, args={"ev": ev}
+                             ).after(cur)
+                      for c, b in zip(cols, _split(out_bytes, len(cols)))]
+            rec["egress"] = egress
+            cur = g.task(f"{ev}.done", record=False).after(*egress)
+        rec["done"] = cur
+        prev_done = cur
+        ev_tasks.append(rec)
+    return InstanceSim(label=label, tenant=tenant, replica=replica,
+                       placement=placement, event_tasks=ev_tasks)
+
+
+def _finalize(g: TaskGraph, arr: ArrayResources, insts: List[InstanceSim],
+              cfg: SimConfig, trace: Optional[ChromeTrace]) -> SimResult:
+    g.run(max_events=cfg.max_events)
+    for inst in insts:
+        for e, rec in enumerate(inst.event_tasks):
+            lat = rec["done"].end - rec["root"].end
+            inst.latencies.append(lat)
+            if trace is not None:
+                trace.span("events", inst.label, f"e{e}", rec["root"].end,
+                           lat, args={"latency_ns": aie_arch.ns(lat)})
+    return SimResult(graph=g, arr=arr, instances=insts, config=cfg,
+                     trace=trace)
+
+
+def simulate_placement(placement: Placement, *, tenant: str = "model",
+                       p: OverheadParams = OVERHEADS,
+                       config: Optional[SimConfig] = None) -> SimResult:
+    """Simulate one standalone instance end to end (Tier-S single tenant)."""
+    cfg = config or SimConfig()
+    trace = ChromeTrace(meta={"mode": "single", "seed": cfg.seed,
+                              "tenant": tenant}) if cfg.trace else None
+    g = TaskGraph(trace=trace)
+    arr = ArrayResources(shim_shared=cfg.shim_contention)
+    rng = random.Random(cfg.seed)
+    inst = _build_instance(g, arr, placement, tenant=tenant, replica=0,
+                           n_events=cfg.events, p=p, cfg=cfg, rng=rng)
+    return _finalize(g, arr, [inst], cfg, trace)
+
+
+def simulate_schedule(schedule, *, p: OverheadParams = OVERHEADS,
+                      config: Optional[SimConfig] = None) -> SimResult:
+    """Simulate a multi-tenant :class:`repro.core.tenancy.ArraySchedule`.
+
+    All instances ingest concurrently through the *shared* shim columns
+    under their boxes; with ``config.shim_contention`` (default) transfers
+    sharing a column serialize, which is the contention-aware replacement
+    for the congestion-free ``R / latency`` throughput model.
+    """
+    cfg = config or SimConfig()
+    trace = (ChromeTrace(meta={"mode": "schedule", "seed": cfg.seed,
+                               "instances": len(schedule.instances)})
+             if cfg.trace else None)
+    g = TaskGraph(trace=trace)
+    arr = ArrayResources(rows=schedule.rows, cols=schedule.cols,
+                         shim_shared=cfg.shim_contention)
+    rng = random.Random(cfg.seed)
+    insts = [_build_instance(g, arr, inst.placement, tenant=inst.tenant,
+                             replica=inst.replica, n_events=cfg.events,
+                             p=p, cfg=cfg, rng=rng)
+             for inst in schedule.instances]
+    return _finalize(g, arr, insts, cfg, trace)
+
+
+def simulated_latency_cycles(placement: Placement, *,
+                             p: OverheadParams = OVERHEADS,
+                             config: Optional[SimConfig] = None) -> float:
+    cfg = config or SimConfig(events=1, trace=False)
+    return simulate_placement(placement, p=p, config=cfg).latency_cycles
+
+
+def rescorer(*, p: OverheadParams = OVERHEADS,
+             config: Optional[SimConfig] = None
+             ) -> Callable[["object"], float]:
+    """Tier-S re-scoring hook for :func:`repro.core.dse.search`.
+
+    Returns a callable mapping a ``DSEResult`` to its simulated end-to-end
+    latency in cycles; ``dse.search(model, rescore=sim.rescorer())`` then
+    re-ranks its placement-validated top-K designs by simulated latency.
+    """
+    cfg = config or SimConfig(events=1, trace=False)
+
+    def _score(design) -> float:
+        return simulate_placement(design.placement,
+                                  tenant=design.model.name, p=p,
+                                  config=cfg).latency_cycles
+    return _score
+
+
+# ---------------------------------------------------------------------------
+# Structural invariants (consumed by tests and the benchmark's verify pass)
+# ---------------------------------------------------------------------------
+
+def invariant_errors(result: SimResult) -> List[str]:
+    """Conservation/ordering violations of a finished run (empty = clean).
+
+    Checks: (1) no resource span overlaps another on the same resource —
+    in particular no tile is double-booked; (2) byte conservation — every
+    event's ingest slices sum to the first layer's input bytes, each
+    inter-layer edge carries exactly the producer's output bytes, egress
+    slices sum to the last layer's output; (3) span nesting — every child
+    task of an event lies within the event's [arrive, done] envelope, and
+    layer i+1 never starts before layer i finishes.
+    """
+    errs: List[str] = []
+    resources = {**result.arr.tile_resources(),
+                 **result.arr.shim_resources()}
+    for key, res in resources.items():
+        spans = sorted(res.spans, key=lambda s: s[1])
+        for (na, sa, ea, _), (nb, sb, eb, _) in zip(spans, spans[1:]):
+            if sb < ea - 1e-9:
+                errs.append(f"{res.name}: '{na}' [{sa},{ea}) overlaps "
+                            f"'{nb}' [{sb},{eb})")
+    for inst in result.instances:
+        mm = inst.placement.model_mapping
+        in_bytes = mm.mappings[0].layer.in_bytes
+        out_bytes = mm.mappings[-1].layer.out_bytes
+        for e, rec in enumerate(inst.event_tasks):
+            ev = f"{inst.label}.e{e}"
+            if rec["ingest"]:
+                got = sum(t.bytes for t in rec["ingest"])
+                if got != in_bytes:
+                    errs.append(f"{ev}: ingest {got} B != in_bytes {in_bytes}")
+            for i, (kind, edge, data) in enumerate(rec["edges"]):
+                want = mm.mappings[i].layer.out_bytes
+                if edge.bytes != want:
+                    errs.append(f"{ev}: edge {i} ({kind}) carries "
+                                f"{edge.bytes} B != producer out {want}")
+            if rec["egress"]:
+                got = sum(t.bytes for t in rec["egress"])
+                if got != out_bytes:
+                    errs.append(f"{ev}: egress {got} B != out_bytes {out_bytes}")
+            t0, t1 = rec["root"].end, rec["done"].end
+            children = (list(rec["ingest"]) + list(rec["egress"])
+                        + [t for spans in rec["layers"] for t in spans]
+                        + [edge for _, edge, _ in rec["edges"]])
+            for t in children:
+                if t.start < t0 - 1e-9 or t.end > t1 + 1e-9:
+                    errs.append(f"{ev}: task {t.name} [{t.start},{t.end}] "
+                                f"escapes event envelope [{t0},{t1}]")
+            for i in range(len(rec["layers"]) - 1):
+                end_i = max(t.end for t in rec["layers"][i])
+                start_next = min(t.start for t in rec["layers"][i + 1])
+                if start_next < end_i - 1e-9:
+                    errs.append(f"{ev}: layer {i + 1} starts {start_next} "
+                                f"before layer {i} ends {end_i}")
+    return errs

@@ -1,0 +1,273 @@
+"""Tier-S discrete-event simulator: engine semantics, sim-vs-analytic
+agreement, conservation/ordering invariants, and shim-column contention."""
+import os
+
+import pytest
+
+from repro.core import aie_arch, dse, layerspec, perfmodel, tenancy
+from repro.core.layerspec import LayerSpec, ModelSpec
+from repro.core.mapping import Mapping, ModelMapping
+from repro.core.placement import place
+from repro.sim import run as simrun
+from repro.sim import trace as simtrace
+from repro.sim.events import DeadlockError, Resource, Simulator, TaskGraph
+
+
+@pytest.fixture(scope="module")
+def ds32_design():
+    r = dse.explore(layerspec.deepsets_32())
+    assert r is not None
+    return r
+
+
+@pytest.fixture(scope="module")
+def dense_schedule():
+    """Max-replica packing of the smallest Deepsets-32 frontier design —
+    the heavily stacked schedule with saturated shim columns."""
+    fr = dse.search(layerspec.deepsets_32())
+    sched = tenancy.pack_max_replicas(fr[0])
+    assert sched is not None and len(sched.instances) >= 4
+    return sched
+
+
+class TestEngine:
+    def test_fifo_resource_serializes(self):
+        g = TaskGraph()
+        res = Resource("r")
+        a = g.task("a", duration=10.0, resource=res)
+        b = g.task("b", duration=5.0, resource=res)
+        g.run()
+        # same release order as request order, back to back
+        assert (a.start, a.end) == (0.0, 10.0)
+        assert (b.start, b.end) == (10.0, 15.0)
+        assert res.busy_cycles == 15.0 and res.waits == 1
+
+    def test_capacity_2_runs_concurrently(self):
+        g = TaskGraph()
+        res = Resource("r", capacity=2)
+        tasks = [g.task(f"t{i}", duration=10.0, resource=res)
+                 for i in range(3)]
+        g.run()
+        assert [t.end for t in tasks] == [10.0, 10.0, 20.0]
+
+    def test_dependencies_and_delay(self):
+        g = TaskGraph()
+        a = g.task("a", duration=3.0)
+        b = g.task("b", duration=2.0, delay=4.0).after(a)
+        c = g.task("c", duration=1.0).after(a, b)
+        g.run()
+        assert b.start == 7.0 and c.start == 9.0 and g.makespan == 10.0
+
+    def test_deadlock_detected(self):
+        g = TaskGraph()
+        a = g.task("a", duration=1.0)
+        b = g.task("b", duration=1.0).after(a)
+        a.after(b)                       # cycle: neither can ever start
+        with pytest.raises(DeadlockError) as ei:
+            g.run()
+        assert len(ei.value.unfinished) == 2
+
+    def test_deterministic_tie_break(self):
+        order = []
+        sim = Simulator()
+        for name in "abc":
+            sim.schedule(5.0, lambda n=name: order.append(n))
+        sim.run()
+        assert order == ["a", "b", "c"]
+
+
+def _single_aie_placement(m, k, n):
+    layer = LayerSpec(kind="mm", M=m, K=k, N=n, name=f"{m}x{k}x{n}")
+    spec = ModelSpec((layer,), name=f"t2-{m}x{k}x{n}")
+    mm = ModelMapping(model=spec, mappings=(Mapping(1, 1, 1, layer),))
+    return place(mm)
+
+
+class TestSimVsAnalytic:
+    @pytest.mark.parametrize("shape", sorted(perfmodel.TABLE2_NS))
+    def test_table2_shape_agrees(self, shape):
+        pl = _single_aie_placement(*shape)
+        ana = perfmodel.end_to_end_cycles(pl).total
+        res = simrun.simulate_placement(pl, config=simrun.SimConfig(trace=False))
+        assert res.latency_cycles == pytest.approx(ana, rel=1e-9)
+
+    @pytest.mark.parametrize("name", ["Deepsets-32", "JSC-M"])
+    def test_workload_design_agrees(self, name):
+        r = dse.explore(layerspec.REALISTIC_WORKLOADS[name]())
+        res = simrun.simulate_placement(r.placement,
+                                        config=simrun.SimConfig(trace=False))
+        assert res.latency_cycles == pytest.approx(r.latency.total, rel=1e-9)
+
+    def test_ideal_mode_agrees(self, ds32_design):
+        ana = perfmodel.end_to_end_cycles(ds32_design.placement,
+                                          ideal=True).total
+        res = simrun.simulate_placement(
+            ds32_design.placement,
+            config=simrun.SimConfig(trace=False, ideal=True))
+        assert res.latency_cycles == pytest.approx(ana, rel=1e-9)
+
+    def test_layer_occupancy_matches_eq4(self, ds32_design):
+        links = ds32_design.placement.cascade_links()
+        for i, m in enumerate(ds32_design.mapping.mappings):
+            out_cas = i < len(links) and links[i]
+            occ = perfmodel.layer_occupancy(m, out_cascade=out_cas)
+            ref = perfmodel.layer_comp_cycles(m, out_cascade=out_cas)
+            assert occ.makespan == pytest.approx(ref, rel=1e-12)
+            assert len(occ.spans) == m.tiles
+
+
+class TestInvariants:
+    def test_single_tenant_clean(self, ds32_design):
+        res = simrun.simulate_placement(
+            ds32_design.placement, config=simrun.SimConfig(events=3))
+        assert simrun.invariant_errors(res) == []
+
+    def test_multi_tenant_clean(self, dense_schedule):
+        res = simrun.simulate_schedule(
+            dense_schedule, config=simrun.SimConfig(events=3, trace=False))
+        assert simrun.invariant_errors(res) == []
+
+    def test_no_tile_double_booked(self, dense_schedule):
+        res = simrun.simulate_schedule(
+            dense_schedule, config=simrun.SimConfig(events=2, trace=False))
+        for (r, c), tile in res.arr.tile_resources().items():
+            spans = sorted(tile.spans, key=lambda s: s[1])
+            for (_, _, ea, _), (_, sb, _, _) in zip(spans, spans[1:]):
+                assert sb >= ea - 1e-9, f"tile ({r},{c}) double-booked"
+
+    def test_bytes_conserved_per_event(self, ds32_design):
+        res = simrun.simulate_placement(
+            ds32_design.placement, config=simrun.SimConfig(events=2,
+                                                           trace=False))
+        mm = ds32_design.mapping
+        for rec in res.instances[0].event_tasks:
+            assert (sum(t.bytes for t in rec["ingest"])
+                    == mm.mappings[0].layer.in_bytes)
+            assert (sum(t.bytes for t in rec["egress"])
+                    == mm.mappings[-1].layer.out_bytes)
+            for i, (_, edge, _) in enumerate(rec["edges"]):
+                assert edge.bytes == mm.mappings[i].layer.out_bytes
+
+    def test_trace_round_trips(self, ds32_design, tmp_path):
+        res = simrun.simulate_placement(ds32_design.placement)
+        path = os.path.join(tmp_path, "trace.json")
+        res.trace.save(path)
+        data = simtrace.load(path)
+        spans = [e for e in data["traceEvents"] if e["ph"] == "X"]
+        assert spans and all(e["dur"] >= 0 for e in spans)
+        # every lane class the issue names is present: tile/fifo-or-dma/shim
+        pids = {e["pid"] for e in spans}
+        assert simtrace.PIDS["tiles"] in pids
+        assert simtrace.PIDS["shim"] in pids
+        assert (simtrace.PIDS["fifo"] in pids
+                or simtrace.PIDS["dma"] in pids)
+
+
+class TestContention:
+    def test_stacked_replicas_pay_for_shared_shim(self, dense_schedule):
+        sc = dense_schedule.shim_contention()
+        assert sc.shared_cols > 0
+        assert sc.penalty > 0.0
+        assert sc.eps_contended < sc.eps_free
+        assert all(f <= 1.0 for f in sc.factors)
+        res = simrun.simulate_schedule(
+            dense_schedule, config=simrun.SimConfig(events=6, trace=False))
+        assert res.throughput_eps() < sc.eps_free
+        assert res.shim_wait_cycles() > 0
+
+    def test_sim_tracks_analytic_when_saturated(self, dense_schedule):
+        """The fluid model and the DES must agree on the saturated regime."""
+        sc = dense_schedule.shim_contention()
+        res = simrun.simulate_schedule(
+            dense_schedule, config=simrun.SimConfig(events=8, trace=False))
+        assert res.throughput_eps() == pytest.approx(sc.eps_contended,
+                                                     rel=0.15)
+
+    def test_congestion_free_counterfactual(self, dense_schedule):
+        """Private shim copies (shim_contention=False) restore R/latency."""
+        res = simrun.simulate_schedule(
+            dense_schedule,
+            config=simrun.SimConfig(events=4, shim_contention=False,
+                                    trace=False))
+        free = dense_schedule.throughput_eps()
+        assert res.throughput_eps() == pytest.approx(free, rel=1e-6)
+        assert res.shim_wait_cycles() == 0.0
+
+    def test_single_instance_unaffected_by_shared_resources(self, ds32_design):
+        sched = tenancy.pack_replicas(ds32_design, 1)
+        res = simrun.simulate_schedule(sched,
+                                       config=simrun.SimConfig(trace=False))
+        assert res.latency_cycles == pytest.approx(ds32_design.latency.total,
+                                                   rel=1e-9)
+
+    def test_jitter_is_seeded(self, dense_schedule):
+        cfg = lambda s: simrun.SimConfig(events=3, seed=s, jitter_cycles=100.0,
+                                         trace=False)
+        a = simrun.simulate_schedule(dense_schedule, config=cfg(7))
+        b = simrun.simulate_schedule(dense_schedule, config=cfg(7))
+        c = simrun.simulate_schedule(dense_schedule, config=cfg(8))
+        assert a.makespan_cycles == b.makespan_cycles
+        assert a.makespan_cycles != c.makespan_cycles
+
+
+class TestShimFootprint:
+    def test_footprint_is_bbox_columns(self, ds32_design):
+        box = ds32_design.placement.bounding_box()
+        assert ds32_design.placement.shim_columns() == tuple(
+            range(box.c0, box.c1))
+
+    def test_uncapped_transfer_matches_analytic_plio(self, ds32_design):
+        maps = ds32_design.mapping.mappings
+        cols, t_in, t_out = tenancy.shim_transfer_cycles(ds32_design.placement)
+        first, last = maps[0], maps[-1]
+        if first.A * first.B <= aie_arch.SHIM_STREAMS_PER_COL * len(cols):
+            assert t_in == perfmodel.plio_cycles(first.layer.in_bytes,
+                                                 first.A * first.B)
+        if last.A * last.C <= aie_arch.SHIM_STREAMS_PER_COL * len(cols):
+            assert t_out == perfmodel.plio_cycles(last.layer.out_bytes,
+                                                  last.A * last.C)
+
+    def test_narrow_box_caps_effective_ports(self):
+        # A tall first layer (A=8, B=1) wants 8 load ports through a
+        # 1-column box: the shim can only stream 2, so ingest slows down.
+        layer = LayerSpec(kind="mm", M=64, K=16, N=16, name="tall")
+        spec = ModelSpec((layer,), name="tall")
+        mm = ModelMapping(model=spec, mappings=(Mapping(8, 1, 1, layer),))
+        pl = place(mm)
+        cols, t_in, _ = tenancy.shim_transfer_cycles(pl)
+        assert len(cols) == 1
+        assert t_in > perfmodel.plio_cycles(layer.in_bytes, 8)
+        assert t_in == perfmodel.plio_cycles(
+            layer.in_bytes, aie_arch.SHIM_STREAMS_PER_COL)
+
+
+class TestTierSRescore:
+    def test_rescore_fills_sim_cycles(self):
+        fr = dse.search(layerspec.deepsets_32(), top_k=24,
+                        rescore=simrun.rescorer())
+        assert fr
+        tiles = [d.mapping.total_tiles for d in fr]
+        assert tiles == sorted(tiles)
+        for d in fr:
+            assert d.sim_cycles is not None
+            # single-tenant sim inherits the Tier-A calibration
+            assert d.sim_cycles == pytest.approx(d.latency.total, rel=1e-9)
+            assert d.sim_latency_ns == pytest.approx(d.latency.total_ns,
+                                                     rel=1e-9)
+
+    def test_rescore_reranks_frontier(self):
+        # A rescorer that inverts the cost ordering must change the frontier:
+        # with constant cost only the first (fewest-tile) design survives.
+        fr = dse.search(layerspec.deepsets_32(), top_k=24,
+                        rescore=lambda d: 1.0)
+        assert len(fr) == 1
+
+    def test_frontier_points_carry_contended_eps(self):
+        fr = tenancy.throughput_frontier(layerspec.deepsets_32(), top_k=24)
+        assert fr
+        for pt in fr:
+            assert pt.contention == "analytic"
+            assert pt.events_per_sec_contended <= pt.events_per_sec + 1e-6
+            assert 0.0 < pt.contention_factor <= 1.0
+            d = pt.as_dict()
+            assert "events_per_sec_contended" in d

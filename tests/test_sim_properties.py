@@ -1,0 +1,59 @@
+"""Property-based tests of the discrete-event simulator (hypothesis):
+whatever valid placement the DSE produces, the event loop must terminate
+(no deadlock), conserve bytes, and never undercut the analytic model."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dse, tenancy
+from repro.core.layerspec import LayerSpec, ModelSpec
+from repro.sim import run as simrun
+
+
+@st.composite
+def mlp_chains(draw):
+    """Random MM chains with chained shapes (layer i's N == layer i+1's K)."""
+    n_layers = draw(st.integers(1, 5))
+    m = draw(st.sampled_from([8, 16, 32, 64]))
+    dims = [draw(st.sampled_from([5, 8, 16, 21, 32, 64]))
+            for _ in range(n_layers + 1)]
+    layers = tuple(
+        LayerSpec(kind="mm", M=m, K=dims[i], N=dims[i + 1],
+                  bias=draw(st.booleans()), relu=i < n_layers - 1,
+                  name=f"l{i}")
+        for i in range(n_layers))
+    return ModelSpec(layers, name="rand")
+
+
+class TestSimProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(model=mlp_chains(), events=st.integers(1, 3))
+    def test_valid_placements_never_deadlock(self, model, events):
+        r = dse.explore(model)
+        if r is None:
+            return                      # infeasible chains are allowed
+        res = simrun.simulate_placement(
+            r.placement, config=simrun.SimConfig(events=events, trace=False))
+        # completion: every event of every instance finished
+        assert all(len(i.latencies) == events for i in res.instances)
+        assert simrun.invariant_errors(res) == []
+        # the sim adds resource waits and shim caps on top of the analytic
+        # serial sum — it can only ever be slower, never faster.
+        assert res.latency_cycles >= r.latency.total * (1 - 1e-9)
+
+    @settings(max_examples=8, deadline=None)
+    @given(model=mlp_chains(), seed=st.integers(0, 2 ** 16))
+    def test_packed_replicas_never_deadlock(self, model, seed):
+        r = dse.explore(model)
+        if r is None:
+            return
+        sched = tenancy.pack_max_replicas(r, cap=4)
+        if sched is None:
+            return
+        res = simrun.simulate_schedule(
+            sched, config=simrun.SimConfig(events=2, seed=seed,
+                                           jitter_cycles=64.0, trace=False))
+        assert all(len(i.latencies) == 2 for i in res.instances)
+        assert simrun.invariant_errors(res) == []
+        # serialization can delay but never destroy work: throughput is
+        # positive and bounded by the congestion-free model.
+        assert 0 < res.throughput_eps() <= sched.throughput_eps() * (1 + 1e-9)

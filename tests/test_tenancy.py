@@ -98,10 +98,13 @@ class TestPacking:
 
 class TestThroughputDSE:
     def test_frontier_monotone_and_valid(self):
+        # Default contention="analytic": the frontier is Pareto over
+        # {latency, contended eps}; congestion-free eps is still reported
+        # per point but need not be monotone once contention is priced.
         fr = tenancy.throughput_frontier(layerspec.deepsets_32())
         assert fr
         lats = [pt.latency_ns for pt in fr]
-        eps = [pt.events_per_sec for pt in fr]
+        eps = [pt.events_per_sec_contended for pt in fr]
         assert lats == sorted(lats)
         assert eps == sorted(eps)
         for pt in fr:
@@ -109,6 +112,16 @@ class TestThroughputDSE:
             assert len(pt.schedule.instances) == pt.replicas
             assert pt.events_per_sec == pytest.approx(
                 pt.replicas * 1e9 / pt.latency_ns)
+            assert pt.events_per_sec_contended <= pt.events_per_sec + 1e-6
+
+    def test_frontier_congestion_free_mode_matches_pr1_semantics(self):
+        fr = tenancy.throughput_frontier(layerspec.deepsets_32(),
+                                         contention="none")
+        assert fr
+        eps = [pt.events_per_sec for pt in fr]
+        assert eps == sorted(eps)
+        for pt in fr:
+            assert pt.events_per_sec_contended == pt.events_per_sec
 
     def test_iso_latency_speedup_at_least_2x(self, ds32_best):
         """Acceptance: >= 2x modeled events/sec over the single-replica
