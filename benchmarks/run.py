@@ -22,6 +22,7 @@ BENCHES = {
     "dse_quality": dse_quality.main,
     "roofline_report": roofline_report.main,
     "throughput_pareto": throughput_pareto.main,
+    "pipelined_throughput": throughput_pareto.pipelined_headline,
     "sim_vs_model": sim_vs_model.main,
 }
 

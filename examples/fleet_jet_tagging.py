@@ -1,11 +1,14 @@
 """Multi-tenant fleet serving (beyond the paper — repro.core.tenancy).
 
 Trains a DeepSets jet tagger, deploys it behind a ``FleetServer`` with 4
-replica kernels (interpret-mode Pallas on this CPU container), streams a
-batch of events across the replicas, and reports measured p50/p99 +
-events/sec with per-replica dispatch accounting, next to the Tier-A modeled
-multi-tenant schedule on the VEK280 (replica packing, shared PLIO budget,
-modeled events/sec).
+replica kernels (interpret-mode Pallas on this CPU container), dispatches a
+micro-batched event stream sliced across the replicas (scatter/gather),
+and reports batched p50/p99 + events/sec with per-replica scatter
+accounting, next to the Tier-A modeled multi-tenant schedule on the VEK280
+— serial R/latency events/sec plus the pipelined headline: per-replica
+initiation interval (II), sustained pipelined events/sec, and the
+contended pipelined throughput-frontier target for the deployed replica
+count.
 
     PYTHONPATH=src python examples/fleet_jet_tagging.py [--events 256]
 """

@@ -1,16 +1,18 @@
 """Execute a placed design on the Tier-S discrete-event simulator.
 
 Walks the full fidelity ladder for one workload: Tier-A analytic latency,
-Tier-S simulated latency (they must agree for a single tenant), then packs
-replicas onto the shared array and shows what shim-column contention does
-to the congestion-free throughput claim. Writes a Chrome trace you can
-open at chrome://tracing or https://ui.perfetto.dev.
+Tier-S simulated latency (they must agree for a single tenant), the
+pipelined headline — initiation interval and the sustained events/sec a
+deep-pipelined run converges to — then packs replicas onto the shared
+array and shows what shim-column contention does to both the serial and
+the pipelined congestion-free throughput claims. Writes a Chrome trace you
+can open at chrome://tracing or https://ui.perfetto.dev.
 
     PYTHONPATH=src python examples/simulate_deepsets.py [workload]
 """
 import sys
 
-from repro.core import aie_arch, dse, tenancy
+from repro.core import aie_arch, dse, perfmodel, tenancy
 from repro.core.layerspec import REALISTIC_WORKLOADS
 from repro.sim import run as simrun
 
@@ -24,20 +26,41 @@ print(f"{model.name}: Tier-A {design.latency.total_ns:.1f} ns, "
       f"({len(res.graph.tasks)} tasks, "
       f"{res.graph.sim.events_run} engine events)")
 
+# pipelined headline: II, sustained rate, bottleneck stage
+pb = perfmodel.pipeline_stages(design.placement)
+depth = perfmodel.pipeline_fill_depth(design.latency.total, pb.interval)
+piped = simrun.simulate_placement(
+    design.placement, tenant=model.name,
+    config=simrun.SimConfig(events=24, pipeline_depth=depth, trace=False))
+print(f"{model.name} pipelined: II {aie_arch.ns(pb.interval):.1f} ns "
+      f"(bottleneck {pb.bottleneck.name}) -> sustained "
+      f"{piped.steady_throughput_eps() / 1e6:.3f} Meps, "
+      f"{design.latency.total / pb.interval:.2f}x over the serial "
+      f"{1e3 / design.latency.total_ns:.3f} Meps (1/latency)")
+
 path = f"sim_trace_{model.name}.json"
 res.trace.save(path)
 print(f"Chrome trace -> {path}")
 
-print("\nreplica packing vs shim-column contention:")
-print("replicas,shared_cols,free_meps,analytic_meps,sim_meps,penalty%")
+print("\nreplica packing vs shim-column contention "
+      "(serial depth-1 | pipelined):")
+print("replicas,shared_cols,free_meps,analytic_meps,sim_meps,penalty%,"
+      "pipe_free_meps,pipe_analytic_meps,pipe_sim_meps")
 for design in tenancy.dse.search(model):
     sched = tenancy.pack_max_replicas(design)
     if sched is None or len(sched.instances) < 2:
         continue
-    sc = sched.shim_contention()
+    sc = sched.shim_contention(pipelined=False)
     sim = simrun.simulate_schedule(
         sched, config=simrun.SimConfig(events=6, trace=False))
     eps = sim.throughput_eps()
+    scp = sched.shim_contention(pipelined=True)
+    simp = simrun.simulate_schedule(
+        sched, config=simrun.SimConfig(events=18, pipeline_depth=4,
+                                       trace=False))
+    epsp = simp.steady_throughput_eps()
     print(f"{len(sched.instances)},{sc.shared_cols},"
           f"{sc.eps_free / 1e6:.2f},{sc.eps_contended / 1e6:.2f},"
-          f"{eps / 1e6:.2f},{100 * (1 - eps / sc.eps_free):.1f}")
+          f"{eps / 1e6:.2f},{100 * (1 - eps / sc.eps_free):.1f},"
+          f"{scp.eps_free / 1e6:.2f},{scp.eps_contended / 1e6:.2f},"
+          f"{epsp / 1e6:.2f}")

@@ -35,7 +35,9 @@ from .layerspec import ModelSpec
 from .mapping import Mapping, ModelMapping, cascade_compatible, enumerate_mappings
 from .placement import Placement, place
 from .perfmodel import (LatencyBreakdown, cascade_comm_cycles, dma_comm_cycles,
-                        end_to_end_cycles, layer_comp_cycles, plio_cycles)
+                        end_to_end_cycles, initiation_interval_cycles,
+                        layer_comp_cycles, layer_occupancy, plio_cycles,
+                        shim_stage_cycles)
 
 
 @dataclasses.dataclass
@@ -49,6 +51,11 @@ class DSEResult:
     #: Tier-S simulated end-to-end cycles, filled when the design was
     #: re-scored by the discrete-event simulator (search(rescore=...)).
     sim_cycles: Optional[float] = None
+    #: Congestion-free pipelined initiation interval (bottleneck stage of
+    #: perfmodel.pipeline_stages). II <= latency; a pipelined instance
+    #: sustains 1/II events/cycle even though each event takes the full
+    #: latency to flow through.
+    interval_cycles: Optional[float] = None
 
     @property
     def latency_ns(self) -> float:
@@ -57,6 +64,11 @@ class DSEResult:
     @property
     def sim_latency_ns(self) -> Optional[float]:
         return None if self.sim_cycles is None else aie_arch.ns(self.sim_cycles)
+
+    @property
+    def interval_ns(self) -> Optional[float]:
+        return (None if self.interval_cycles is None
+                else aie_arch.ns(self.interval_cycles))
 
     @property
     def cascade_edges(self) -> int:
@@ -97,6 +109,28 @@ def pareto_front(items: Sequence, key: Callable) -> List:
         if all(key(it)[1] < key(kept)[1] for kept in front):
             front.append(it)
     return front
+
+
+def pareto_front_nd(items: Sequence, key: Callable) -> List:
+    """N-dimensional Pareto filter: ``key(item) -> tuple``, every
+    coordinate minimized. Keeps items no other item dominates (dominates =
+    ``<=`` in every coordinate and a different key tuple; exact-duplicate
+    keys keep the first), sorted by ascending key. Used by :func:`search`
+    for the {tiles, latency, initiation interval} frontier — a design with
+    worse latency but a deeper pipeline (smaller II) now survives."""
+    kept: List = []
+    seen = set()
+    for it in sorted(items, key=key):
+        k = key(it)
+        if k in seen:
+            continue
+        # Sorting is lexicographic, so any dominator of ``it`` sorts before
+        # it and (being undominated itself, by transitivity) is in ``kept``.
+        if any(all(a <= b for a, b in zip(key(kp), k)) for kp in kept):
+            continue
+        kept.append(it)
+        seen.add(k)
+    return kept
 
 
 def _pareto_insert(frontier: List[Tuple[int, float, tuple]], tiles: int,
@@ -201,10 +235,23 @@ def _score_back(model: ModelSpec, back: tuple, layer_maps, *,
         return None
     lat = end_to_end_cycles(pl, p=p, include_plio=include_plio)
     if force_dma:
-        # ablation: cost every edge as DMA even if adjacency allows cascade
+        # ablation: cost every edge as DMA even if adjacency allows cascade,
+        # and price the initiation interval on the same all-DMA stages
+        # (cascade stages would understate the ablation's bottleneck).
         lat = _recost_all_dma(pl, p=p, include_plio=include_plio)
+        stages = [max(d for _, _, _, d in
+                      layer_occupancy(m, out_cascade=False, p=p).spans)
+                  for m in maps] + list(lat.comm)
+        if include_plio:
+            _, t_in, t_out = shim_stage_cycles(pl, p=p)
+            stages.append(t_in + t_out)
+        interval = max(stages)
+    else:
+        interval = initiation_interval_cycles(pl, p=p,
+                                              include_plio=include_plio)
     return DSEResult(model=model, mapping=mm, placement=pl, latency=lat,
-                     candidates_scored=0, dp_states=dp_states)
+                     candidates_scored=0, dp_states=dp_states,
+                     interval_cycles=interval)
 
 
 def explore(model: ModelSpec, *,
@@ -252,15 +299,17 @@ def search(model: ModelSpec, *,
            include_plio: bool = True,
            rescore: Optional[Callable[[DSEResult], float]] = None
            ) -> List[DSEResult]:
-    """Placement-validated Pareto frontier over {tiles, latency}.
+    """Placement-validated Pareto frontier over {tiles, latency, II}.
 
     Same search as :func:`explore`, but instead of only the latency winner it
-    returns every design on the {tiles used, end-to-end latency} Pareto
-    frontier among the re-scored top-K candidates, sorted by ascending tile
-    count (so the last entry is the latency-optimal design). This is the
-    input to the multi-tenant throughput DSE (:mod:`repro.core.tenancy`):
-    a design using fewer tiles admits more replicas on the shared array, so
-    points that lose on single-instance latency can win on events/sec.
+    returns every design on the {tiles used, end-to-end latency, initiation
+    interval} Pareto frontier among the re-scored top-K candidates, sorted
+    by ascending tile count. This is the input to the multi-tenant
+    throughput DSE (:mod:`repro.core.tenancy`): a design using fewer tiles
+    admits more replicas on the shared array, one with a smaller II
+    sustains a higher pipelined rate per replica, so designs that lose the
+    single-instance latency race can win on events/sec either way — a
+    fewer-replica deep-pipeline packing can beat a wide serial one.
 
     ``rescore`` is the Tier-S hook: a callable mapping a DSEResult to a cost
     in cycles (e.g. ``repro.sim.run.rescorer()``, the discrete-event
@@ -290,8 +339,12 @@ def search(model: ModelSpec, *,
             cand.sim_cycles = float(rescore(cand))
     cost = ((lambda d: d.sim_cycles) if rescore is not None
             else (lambda d: d.latency.total))
-    # Pareto filter: keep designs not dominated on (tiles, cost).
-    return pareto_front(scored, lambda d: (d.mapping.total_tiles, cost(d)))
+    # Pareto filter: keep designs not dominated on (tiles, cost, II). The
+    # II axis is what admits deep-pipeline designs that a pure
+    # {tiles, latency} filter would discard as dominated.
+    return pareto_front_nd(
+        scored,
+        lambda d: (d.mapping.total_tiles, cost(d), d.interval_cycles))
 
 
 def _recost_all_dma(placement: Placement, *, p: OverheadParams,

@@ -267,6 +267,222 @@ def agg_baseline_cycles(A: int, H1: int, W2: int, *,
 
 
 # ---------------------------------------------------------------------------
+# Per-edge communication decomposition (shared by Tier-A, Tier-S, pipelining)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EdgeComm:
+    """One inter-layer edge of a placed design, fully priced.
+
+    ``kind`` is ``'cascade'`` | ``'sharedmem'`` | ``'dma'``; ``cycles`` is the
+    Eq. (5)/(6) latency of moving one event's activation across the edge, and
+    ``data_bytes``/``n_streams`` are what the byte-conservation invariants and
+    the DMA striping model consume. The edge is also a pipeline *stage*: it
+    is occupied ``cycles`` per event, independent of the other stages.
+    """
+
+    kind: str
+    cycles: float
+    data_bytes: int
+    n_streams: int
+
+
+def edge_comms(placement: Placement, *, p: OverheadParams = OVERHEADS,
+               ideal: bool = False) -> Tuple[EdgeComm, ...]:
+    """Price every inter-layer edge of a placement (Eq. 5/6 + §4.3.1).
+
+    Single source of truth for the edge kind/cost decision: consumed by
+    :func:`end_to_end_cycles` (serial sum), :func:`pipeline_stages` (stage
+    occupancy), and the Tier-S task-graph builder (:mod:`repro.sim.run`),
+    which previously duplicated this logic.
+    """
+    maps = placement.model_mapping.mappings
+    links = placement.cascade_links()
+    dists = placement.dma_distances()
+    edges: List[EdgeComm] = []
+    for i in range(len(maps) - 1):
+        nxt = maps[i + 1]
+        data = maps[i].layer.out_bytes
+        if links[i]:
+            # Aggregation consumers hand off via shared local memory; the
+            # per-AIE cost is folded into agg_ours_cycles, so either way the
+            # edge itself adds only the constant lock-free gap (Eq. 6).
+            kind = "sharedmem" if nxt.layer.kind == "agg" else "cascade"
+            edges.append(EdgeComm(kind=kind,
+                                  cycles=cascade_comm_cycles(p=p, ideal=ideal),
+                                  data_bytes=data, n_streams=1))
+        else:
+            # Direct DMA between layers: the consumer needs the producer's
+            # output partition it reads; duplicated pieces multicast free.
+            n_streams = max(1, min(maps[i].A * maps[i].C, nxt.A * nxt.B))
+            edges.append(EdgeComm(
+                kind="dma",
+                cycles=dma_comm_cycles(math.ceil(data / n_streams) * n_streams,
+                                       dists[i], n_streams=n_streams, p=p,
+                                       ideal=ideal),
+                data_bytes=data, n_streams=n_streams))
+    return tuple(edges)
+
+
+def shim_stage_cycles(placement: Placement, *, p: OverheadParams = OVERHEADS,
+                      streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL,
+                      ideal: bool = False
+                      ) -> Tuple[Tuple[int, ...], float, float]:
+    """Per-column PLIO occupancy of one instance, per event.
+
+    Returns ``(columns, t_in, t_out)``: the shim columns under the
+    instance's bounding box, and the cycles each column is busy for one
+    event's ingest / egress. Transfers stripe across the footprint columns
+    in parallel, but the effective port count is capped by the shim
+    bandwidth (``streams_per_col`` per column) — a design whose PLIO demand
+    exceeds its box width transfers slower than the uncapped Tier-A
+    ``plio_cycles`` term assumes. When uncapped, ``t_in``/``t_out`` equal
+    the analytic PLIO terms exactly.
+    """
+    maps = placement.model_mapping.mappings
+    first, last = maps[0], maps[-1]
+    cols = placement.shim_columns()
+    eff_in = min(first.A * first.B, streams_per_col * len(cols))
+    eff_out = min(last.A * last.C, streams_per_col * len(cols))
+    t_in = plio_cycles(first.layer.in_bytes, eff_in, p=p, ideal=ideal)
+    t_out = plio_cycles(last.layer.out_bytes, eff_out, p=p, ideal=ideal)
+    return cols, t_in, t_out
+
+
+# ---------------------------------------------------------------------------
+# Pipelined execution: stage decomposition + initiation interval
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PipelineStage:
+    """One overlap-able stage of the per-instance schedule.
+
+    ``cycles`` is the stage's per-event occupancy of its busiest resource —
+    the time the stage needs *per event*, not the time an event spends in
+    it. Stages operate on different events concurrently (cascade-chained
+    columns keep computing layer ``i`` for event ``k+1`` while layer
+    ``i+1`` consumes event ``k``), so the steady-state initiation interval
+    of the instance is the max, not the sum, of the stage occupancies.
+    """
+
+    name: str
+    kind: str          #: 'shim' | 'comp' | 'comm'
+    cycles: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineBreakdown:
+    """The per-instance schedule decomposed into overlap-able stages.
+
+    The serial latency of :func:`end_to_end_cycles` is (up to the shim
+    bandwidth cap) the *sum* of these stages; the pipelined initiation
+    interval is their *max*. ``interval <= latency`` always — a design is
+    never slower pipelined — and the gap between the two is exactly the
+    throughput the serial ``1/latency`` model leaves on the table.
+    """
+
+    stages: Tuple[PipelineStage, ...]
+
+    @property
+    def interval(self) -> float:
+        """Congestion-free initiation interval in cycles (bottleneck stage)."""
+        return max(s.cycles for s in self.stages)
+
+    @property
+    def bottleneck(self) -> PipelineStage:
+        return max(self.stages, key=lambda s: s.cycles)
+
+    def as_dict(self) -> dict:
+        return {"interval_cycles": self.interval,
+                "interval_ns": aie_arch.ns(self.interval),
+                "bottleneck": self.bottleneck.name,
+                "stages": [{"name": s.name, "kind": s.kind,
+                            "cycles": s.cycles} for s in self.stages]}
+
+
+def pipeline_stages(placement: Placement, *, p: OverheadParams = OVERHEADS,
+                    ideal: bool = False, include_plio: bool = True,
+                    streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL
+                    ) -> PipelineBreakdown:
+    """Decompose one instance's schedule into overlap-able pipeline stages.
+
+    Three stage classes, mirroring the resources the Tier-S simulator
+    serializes on:
+
+      * **shim** — the PLIO ingest + egress DMA of the columns under the
+        bounding box. Ingest of event ``k+1`` and egress of event ``k``
+        share the same column DMA, so the stage occupancy per event is
+        ``t_in + t_out`` (per column; columns stripe in parallel).
+      * **comp, one per layer** — the busiest tile of the layer. Within a
+        layer the B cascade columns are skewed by ``L_j`` (FIFO fill), but
+        each *tile* is only busy ``njl * L_j (+ L_o on the epilogue
+        column)`` per event, so a new event can enter the layer every
+        bottleneck-tile occupancy even though the layer's makespan is the
+        longer Eq. (4) value.
+      * **comm, one per inter-layer edge** — the cascade gap / shared-mem
+        handoff / DMA route, occupied ``EdgeComm.cycles`` per event.
+    """
+    maps = placement.model_mapping.mappings
+    links = placement.cascade_links()
+    stages: List[PipelineStage] = []
+    if include_plio:
+        _, t_in, t_out = shim_stage_cycles(placement, p=p,
+                                           streams_per_col=streams_per_col,
+                                           ideal=ideal)
+        stages.append(PipelineStage(name="shim", kind="shim",
+                                    cycles=t_in + t_out))
+    for i, m in enumerate(maps):
+        out_cas = i < len(links) and links[i]
+        occ = layer_occupancy(m, out_cascade=out_cas, p=p, ideal=ideal)
+        busy = max(d for _, _, _, d in occ.spans)
+        stages.append(PipelineStage(name=f"L{i}:{m.layer.name or m.layer.kind}",
+                                    kind="comp", cycles=busy))
+    for i, e in enumerate(edge_comms(placement, p=p, ideal=ideal)):
+        stages.append(PipelineStage(name=f"L{i}>L{i + 1}:{e.kind}",
+                                    kind="comm", cycles=e.cycles))
+    return PipelineBreakdown(stages=tuple(stages))
+
+
+def initiation_interval_cycles(placement: Placement, *,
+                               p: OverheadParams = OVERHEADS,
+                               ideal: bool = False, include_plio: bool = True,
+                               streams_per_col: int =
+                               aie_arch.SHIM_STREAMS_PER_COL) -> float:
+    """Congestion-free initiation interval of a placed design, in cycles.
+
+    The bottleneck stage of :func:`pipeline_stages`: a pipelined instance
+    can accept (and complete) one event every II cycles in steady state,
+    even though each individual event still takes the full end-to-end
+    latency to flow through. II is always <= the Tier-S *simulated* serial
+    latency (every stage is part of that serial schedule). It can exceed
+    the analytic :func:`end_to_end_cycles` total only when the shim
+    bandwidth cap binds (PLIO stream demand > ``streams_per_col`` x box
+    width): there the Eq. (1)-(6) PLIO terms are priced uncapped and the
+    analytic latency is itself optimistic — the capped II is the honest
+    sustained figure. The Tier-S simulator's single-tenant steady-state
+    rate converges to ``1 / II`` once ``pipeline_depth`` covers the fill.
+    """
+    return pipeline_stages(placement, p=p, ideal=ideal,
+                           include_plio=include_plio,
+                           streams_per_col=streams_per_col).interval
+
+
+def pipeline_fill_depth(latency_cycles: float, interval_cycles: float, *,
+                        slack: int = 1, cap: Optional[int] = None) -> int:
+    """Admission depth that keeps the bottleneck stage saturated.
+
+    ``ceil(latency / II) + slack`` events must be in flight before the
+    bottleneck stage stops draining between events; anything deeper only
+    adds queueing. Single source of the formula for the Tier-S drivers,
+    the frontier's sim pricing, and the sim-vs-model agreement gate.
+    """
+    depth = math.ceil(latency_cycles / max(interval_cycles, 1e-9)) + slack
+    if cap is not None:
+        depth = min(depth, cap)
+    return max(2, depth)
+
+
+# ---------------------------------------------------------------------------
 # End-to-end model latency (§5.1: total = sum of L_comp and L_comm)
 # ---------------------------------------------------------------------------
 
@@ -298,7 +514,6 @@ def end_to_end_cycles(placement: Placement, *, p: OverheadParams = OVERHEADS,
     mm = placement.model_mapping
     maps = mm.mappings
     links = placement.cascade_links()
-    dists = placement.dma_distances()
 
     first, last = maps[0], maps[-1]
     plio_in = (plio_cycles(first.layer.in_bytes, first.A * first.B, p=p,
@@ -307,33 +522,14 @@ def end_to_end_cycles(placement: Placement, *, p: OverheadParams = OVERHEADS,
                             ideal=ideal) if include_plio else 0.0)
 
     comp: List[float] = []
-    comm: List[float] = []
-    kinds: List[str] = []
     for i, m in enumerate(maps):
         out_cas = i < len(links) and links[i]
         comp.append(layer_comp_cycles(m, out_cascade=out_cas, p=p, ideal=ideal))
-    for i in range(len(maps) - 1):
-        nxt = maps[i + 1]
-        if links[i]:
-            if nxt.layer.kind == "agg":
-                # shared-memory handoff is folded into agg_ours_cycles'
-                # per-AIE term; edge adds only the lock-free gap.
-                comm.append(cascade_comm_cycles(p=p, ideal=ideal))
-                kinds.append("sharedmem")
-            else:
-                comm.append(cascade_comm_cycles(p=p, ideal=ideal))
-                kinds.append("cascade")
-        else:
-            # Direct DMA between layers: the consumer needs the producer's
-            # output partition it reads; duplicated pieces multicast free.
-            data = maps[i].layer.out_bytes
-            n_streams = max(1, min(maps[i].A * maps[i].C, nxt.A * nxt.B))
-            comm.append(dma_comm_cycles(
-                math.ceil(data / n_streams) * n_streams, dists[i],
-                n_streams=n_streams, p=p, ideal=ideal))
-            kinds.append("dma")
-    return LatencyBreakdown(plio_in=plio_in, comp=comp, comm=comm,
-                            comm_kind=kinds, plio_out=plio_out)
+    edges = edge_comms(placement, p=p, ideal=ideal)
+    return LatencyBreakdown(plio_in=plio_in, comp=comp,
+                            comm=[e.cycles for e in edges],
+                            comm_kind=[e.kind for e in edges],
+                            plio_out=plio_out)
 
 
 # ---------------------------------------------------------------------------

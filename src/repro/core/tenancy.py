@@ -19,12 +19,19 @@ spatial-multi-tenancy axis:
     ports total, and tenant i consumes ``A_1*B_1 + A_n*C_n`` of them, so
     Σ_i ports_i <= P bounds the replica count even when tiles remain.
   * :func:`throughput_frontier` runs the throughput-aware DSE: it takes the
-    per-model {tiles, latency} Pareto frontier from :func:`repro.core.dse.
-    search` and, for each design, packs as many replicas as tiles + PLIO
-    allow. Replicas operate on independent events, so modeled throughput is
-    ``R / latency`` at *unchanged per-event latency* — small-tile designs
-    that lose the single-instance latency race can win on events/sec, which
-    is why the frontier (not just the latency winner) is the right input.
+    per-model {tiles, latency, II} Pareto frontier from :func:`repro.core.
+    dse.search` and, for each design, packs as many replicas as tiles +
+    PLIO allow. Replicas operate on independent events, and each replica is
+    *pipelined*: the cascade-chained columns overlap event ``k+1``'s ingest
+    with event ``k``'s compute, so a replica sustains one event per
+    initiation interval (``perfmodel.initiation_interval_cycles``, the
+    bottleneck stage; II <= latency), not one per end-to-end latency. The
+    modeled fleet rate is therefore ``Σ 1/II_i`` at *unchanged per-event
+    latency* — small-tile designs that lose the single-instance latency
+    race, and fewer-replica designs with deep pipelines, can both win on
+    events/sec, which is why the grown frontier (not just the latency
+    winner) is the right input. ``pipelined=False`` restores the serial
+    ``R / latency`` model for comparison.
   * :func:`pack_mix` schedules a heterogeneous tenant mix (as deployed
     triggers do — several taggers sharing one device), backing designs off
     along their frontiers until the mix fits.
@@ -46,11 +53,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from . import aie_arch, dse
+from . import aie_arch, dse, perfmodel
 from .aie_arch import OverheadParams, OVERHEADS
 from .dse import DSEResult
 from .layerspec import ModelSpec
-from .perfmodel import plio_cycles
 from .placement import (Placement, Rect, find_free_anchor, mark_occupied)
 
 
@@ -63,25 +69,15 @@ def shim_transfer_cycles(placement: Placement, *,
                          streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL,
                          ideal: bool = False
                          ) -> Tuple[Tuple[int, ...], float, float]:
-    """Per-column PLIO occupancy of one instance, per event.
+    """Per-column PLIO occupancy ``(columns, t_in, t_out)`` of one instance.
 
-    Returns ``(columns, t_in, t_out)``: the shim columns under the
-    instance's bounding box, and the cycles each column is busy for one
-    event's ingest / egress. Transfers stripe across the footprint columns
-    in parallel, but the effective port count is capped by the shim
-    bandwidth (``streams_per_col`` per column) — a design whose PLIO demand
-    exceeds its box width transfers slower than the uncapped Tier-A
-    ``plio_cycles`` term assumes. When uncapped, ``t_in``/``t_out`` equal
-    the analytic PLIO terms exactly.
+    Kept as the tenancy-side name; the computation lives in
+    :func:`repro.core.perfmodel.shim_stage_cycles`, where it doubles as the
+    shim *pipeline stage* of the initiation-interval decomposition.
     """
-    maps = placement.model_mapping.mappings
-    first, last = maps[0], maps[-1]
-    cols = placement.shim_columns()
-    eff_in = min(first.A * first.B, streams_per_col * len(cols))
-    eff_out = min(last.A * last.C, streams_per_col * len(cols))
-    t_in = plio_cycles(first.layer.in_bytes, eff_in, p=p, ideal=ideal)
-    t_out = plio_cycles(last.layer.out_bytes, eff_out, p=p, ideal=ideal)
-    return cols, t_in, t_out
+    return perfmodel.shim_stage_cycles(placement, p=p,
+                                       streams_per_col=streams_per_col,
+                                       ideal=ideal)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,17 +85,24 @@ class ShimContention:
     """Analytic serialized-ingest report for one schedule.
 
     Fluid approximation of the capacity-1 shim columns the Tier-S simulator
-    models exactly: each instance demands ``(t_in + t_out) / latency`` of
+    models exactly: each instance demands ``(t_in + t_out) / period`` of
     every column under its box; a column whose summed demand exceeds 1.0
     saturates and throttles every sharer proportionally. Per-event latency
     is unchanged (transfers still complete), only sustained events/sec drop.
+
+    ``basis`` records the per-instance period used: ``"interval"`` (the
+    default — each replica offers one event per pipelined initiation
+    interval, so columns saturate sooner and contention throttles the
+    *interval*) or ``"latency"`` (the serial 1/latency offered rate of the
+    pre-pipelining model).
     """
 
     column_util: Dict[int, float]       #: per shim column: Σ demand (can be > 1)
     column_sharers: Dict[int, int]      #: per shim column: instances using it
     factors: Tuple[float, ...]          #: per instance: throughput throttle <= 1
-    eps_free: float                     #: congestion-free Σ 1/latency
-    eps_contended: float                #: throttled Σ factor_i / latency_i
+    eps_free: float                     #: congestion-free Σ 1/period
+    eps_contended: float                #: throttled Σ factor_i / period_i
+    basis: str = "interval"             #: 'interval' (pipelined) | 'latency'
 
     @property
     def shared_cols(self) -> int:
@@ -127,6 +130,22 @@ class Instance:
     @property
     def latency_ns(self) -> float:
         return self.design.latency.total_ns
+
+    @property
+    def interval_cycles(self) -> float:
+        """Congestion-free pipelined initiation interval of this instance.
+
+        Stage durations and the box width are translation-invariant, so the
+        translated placement's II equals the standalone design's; the design
+        carries it pre-computed from the DSE re-scoring pass.
+        """
+        if self.design.interval_cycles is not None:
+            return self.design.interval_cycles
+        return perfmodel.initiation_interval_cycles(self.placement)
+
+    @property
+    def interval_ns(self) -> float:
+        return aie_arch.ns(self.interval_cycles)
 
     @property
     def tiles(self) -> int:
@@ -173,41 +192,60 @@ class ArraySchedule:
             out.setdefault(i.tenant, []).append(i)
         return out
 
-    def throughput_eps(self) -> float:
-        """Congestion-free modeled fleet events/sec: replicas work
-        independent events, so each contributes 1/latency once its pipeline
-        is primed. See :meth:`contended_eps` for the shim-aware figure."""
+    def throughput_eps(self, *, pipelined: bool = True) -> float:
+        """Congestion-free modeled fleet events/sec.
+
+        Replicas work independent events; with ``pipelined`` (default) each
+        sustains one event per initiation interval (``Σ 1/II_i``) once its
+        pipeline is primed, at unchanged per-event latency. ``pipelined=
+        False`` gives the serial pre-pipelining ``Σ 1/latency_i`` rate.
+        See :meth:`contended_eps` for the shim-aware figure.
+        """
+        if pipelined:
+            return sum(1e9 / i.interval_ns for i in self.instances)
         return sum(1e9 / i.latency_ns for i in self.instances)
 
     def shim_contention(self, *, p: OverheadParams = OVERHEADS,
-                        streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL
-                        ) -> ShimContention:
-        """Analytic serialized-ingest model over the shared shim columns."""
+                        streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL,
+                        pipelined: bool = True) -> ShimContention:
+        """Analytic serialized-ingest model over the shared shim columns.
+
+        Each instance offers one event per ``period`` (its initiation
+        interval when ``pipelined``, its latency otherwise) and occupies
+        every column under its box ``t_in + t_out`` cycles per event. The
+        pipelined basis is the strictly harder regime: II <= latency means
+        higher offered rates, so shared columns saturate sooner and the
+        throttle hits the *interval* each replica can sustain, not just a
+        latency-derived rate.
+        """
         util: Dict[int, float] = {}
         sharers: Dict[int, int] = {}
         per_inst: List[Tuple[Tuple[int, ...], float]] = []
         for inst in self.instances:
             cols, t_in, t_out = shim_transfer_cycles(
                 inst.placement, p=p, streams_per_col=streams_per_col)
-            lat = aie_arch.cycles_from_ns(inst.latency_ns)
-            demand = (t_in + t_out) / lat
+            period = (inst.interval_cycles if pipelined
+                      else aie_arch.cycles_from_ns(inst.latency_ns))
+            demand = (t_in + t_out) / period
             for c in cols:
                 util[c] = util.get(c, 0.0) + demand
                 sharers[c] = sharers.get(c, 0) + 1
-            per_inst.append((cols, lat))
+            per_inst.append((cols, period))
         factors = tuple(
             min([1.0] + [1.0 / util[c] for c in cols if util[c] > 1.0])
             for cols, _ in per_inst)
-        eps_free = self.throughput_eps()
-        eps_cont = sum(f * 1e9 / i.latency_ns
-                       for f, i in zip(factors, self.instances))
+        eps_free = self.throughput_eps(pipelined=pipelined)
+        eps_cont = sum(f * 1e9 / aie_arch.ns(period)
+                       for f, (_, period) in zip(factors, per_inst))
         return ShimContention(column_util=util, column_sharers=sharers,
                               factors=factors, eps_free=eps_free,
-                              eps_contended=eps_cont)
+                              eps_contended=eps_cont,
+                              basis="interval" if pipelined else "latency")
 
-    def contended_eps(self, *, p: OverheadParams = OVERHEADS) -> float:
+    def contended_eps(self, *, p: OverheadParams = OVERHEADS,
+                      pipelined: bool = True) -> float:
         """Modeled events/sec with the serialized-ingest penalty applied."""
-        return self.shim_contention(p=p).eps_contended
+        return self.shim_contention(p=p, pipelined=pipelined).eps_contended
 
     def validate(self) -> List[str]:
         """Structural legality check; returns a list of violations (empty
@@ -237,15 +275,19 @@ class ArraySchedule:
 
     def summary(self) -> dict:
         tenants = {t: len(v) for t, v in self.per_tenant().items()}
-        sc = self.shim_contention()
+        sc = self.shim_contention(pipelined=False)
+        scp = self.shim_contention(pipelined=True)
         return {"instances": len(self.instances), "tenants": tenants,
                 "tiles": self.total_tiles,
                 "utilization": round(self.utilization, 4),
                 "plio_ports": self.plio_ports_used,
-                "modeled_eps": self.throughput_eps(),
+                "modeled_eps": self.throughput_eps(pipelined=False),
                 "modeled_eps_contended": sc.eps_contended,
+                "modeled_eps_pipelined": scp.eps_free,
+                "modeled_eps_pipelined_contended": scp.eps_contended,
                 "shim_cols_shared": sc.shared_cols,
-                "shim_penalty": round(sc.penalty, 4)}
+                "shim_penalty": round(sc.penalty, 4),
+                "shim_penalty_pipelined": round(scp.penalty, 4)}
 
 
 def _normalized(pl: Placement) -> Placement:
@@ -366,12 +408,18 @@ def max_replicas(design: DSEResult, *,
 
 @dataclasses.dataclass(frozen=True)
 class ThroughputPoint:
-    """One point of the {latency, events/sec} frontier for a model.
+    """One point of the {latency, II, events/sec} frontier for a model.
 
-    ``events_per_sec`` is the congestion-free Tier-A figure (``R /
-    latency``); ``events_per_sec_contended`` applies the shim-column
-    serialized-ingest penalty — analytically by default, or measured by the
-    Tier-S simulator when the frontier was built with ``contention="sim"``.
+    Serial figures (the pre-pipelining story): ``events_per_sec`` is the
+    congestion-free ``R / latency`` and ``events_per_sec_contended`` applies
+    the shim serialized-ingest penalty on the latency basis. Pipelined
+    figures: ``interval_ns`` is one replica's congestion-free initiation
+    interval, ``events_per_sec_pipelined`` the congestion-free ``Σ 1/II``
+    and ``events_per_sec_pipelined_contended`` the shim-throttled pipelined
+    rate — analytic by default, measured by the Tier-S simulator when the
+    frontier was built with ``contention="sim"``. The serial/pipelined
+    delta per point is the throughput the 1/latency model left on the
+    table.
     """
 
     tenant: str
@@ -384,6 +432,9 @@ class ThroughputPoint:
     schedule: ArraySchedule
     events_per_sec_contended: float = 0.0
     contention: str = "none"
+    interval_ns: float = 0.0
+    events_per_sec_pipelined: float = 0.0
+    events_per_sec_pipelined_contended: float = 0.0
 
     @property
     def contention_factor(self) -> float:
@@ -391,17 +442,37 @@ class ThroughputPoint:
             return 1.0
         return self.events_per_sec_contended / self.events_per_sec
 
+    @property
+    def pipelined_gain(self) -> float:
+        """Contended pipelined rate over contended serial rate (>= 1)."""
+        if self.events_per_sec_contended <= 0:
+            return 1.0
+        return (self.events_per_sec_pipelined_contended
+                / self.events_per_sec_contended)
+
     def as_dict(self) -> dict:
         return {"tenant": self.tenant, "replicas": self.replicas,
                 "latency_ns": round(self.latency_ns, 2),
+                "interval_ns": round(self.interval_ns, 2),
                 "events_per_sec": round(self.events_per_sec, 1),
                 "events_per_sec_contended":
                     round(self.events_per_sec_contended, 1),
+                "events_per_sec_pipelined":
+                    round(self.events_per_sec_pipelined, 1),
+                "events_per_sec_pipelined_contended":
+                    round(self.events_per_sec_pipelined_contended, 1),
+                "pipelined_gain": round(self.pipelined_gain, 4),
                 "contention": self.contention,
                 "contention_factor": round(self.contention_factor, 4),
                 "tiles_per_replica": self.tiles_per_replica,
                 "tiles_total": self.tiles_total,
                 "plio_ports": self.plio_ports}
+
+
+def _pipeline_depth_for(design: DSEResult, *, cap: int = 32) -> int:
+    """Sim pipeline depth that covers the design's fill (shared formula)."""
+    ii = design.interval_cycles or design.latency.total
+    return perfmodel.pipeline_fill_depth(design.latency.total, ii, cap=cap)
 
 
 def throughput_frontier(model: ModelSpec, *,
@@ -412,21 +483,27 @@ def throughput_frontier(model: ModelSpec, *,
                         top_k: int = 96,
                         max_replicas_cap: Optional[int] = None,
                         contention: str = "analytic",
+                        pipelined: bool = True,
                         sim_events: int = 8) -> List[ThroughputPoint]:
     """Throughput-aware DSE: sweep the latency/replica-count trade-off.
 
-    For every design on the model's {tiles, latency} Pareto frontier, pack
-    the maximum replica count the shared array admits; keep the points that
-    are Pareto-optimal over {per-event latency, modeled events/sec} — where
-    events/sec is the *contended* figure unless ``contention="none"``.
+    For every design on the model's {tiles, latency, II} Pareto frontier,
+    pack the maximum replica count the shared array admits; keep the points
+    that are Pareto-optimal over {per-event latency, modeled events/sec} —
+    where events/sec is the *pipelined contended* figure by default.
     Sorted by ascending latency, so the first entry is the latency winner
     and the last is the throughput winner under the selected model.
 
-    ``contention`` selects how each point's shim-aware events/sec is
-    priced: ``"none"`` keeps the congestion-free assumption, ``"analytic"``
-    (default) applies the serialized-ingest fluid model, ``"sim"`` runs the
-    Tier-S discrete-event simulator (``sim_events`` events per replica) —
-    the most faithful but slowest option.
+    ``contention`` selects how the shim-aware events/sec is priced:
+    ``"none"`` keeps the congestion-free assumption, ``"analytic"``
+    (default) applies the serialized-ingest fluid model, ``"sim"`` measures
+    with the Tier-S discrete-event simulator — the most faithful but
+    slowest option. ``pipelined`` selects the ranking basis: the pipelined
+    rate ``Σ 1/II`` (default; deep-pipeline fewer-replica designs can now
+    beat wide serial packings) or the serial ``Σ 1/latency`` of the
+    pre-pipelining model. Every point carries *both* rate families
+    regardless of the ranking basis (the non-ranking family is priced
+    analytically when ``contention="sim"``).
     """
     if contention not in ("none", "analytic", "sim"):
         raise ValueError(f"unknown contention model {contention!r}")
@@ -437,17 +514,30 @@ def throughput_frontier(model: ModelSpec, *,
                                   cap=max_replicas_cap)
         if sched is None:
             continue
-        eps_free = sched.throughput_eps()
-        if contention == "sim":
-            from repro.sim.run import SimConfig, simulate_schedule
-            res = simulate_schedule(sched, p=p,
-                                    config=SimConfig(events=sim_events,
-                                                     trace=False))
-            eps_cont = res.throughput_eps()
-        elif contention == "analytic":
-            eps_cont = sched.contended_eps(p=p)
+        if contention == "none":
+            eps_free = sched.throughput_eps(pipelined=False)
+            eps_pipe_free = sched.throughput_eps(pipelined=True)
+            eps_cont, eps_pipe_cont = eps_free, eps_pipe_free
         else:
-            eps_cont = eps_free
+            # one shim-occupancy pass per basis; each report carries both
+            # the free and the contended rate for its basis.
+            sc = sched.shim_contention(p=p, pipelined=False)
+            scp = sched.shim_contention(p=p, pipelined=True)
+            eps_free, eps_cont = sc.eps_free, sc.eps_contended
+            eps_pipe_free, eps_pipe_cont = scp.eps_free, scp.eps_contended
+            if contention == "sim":
+                from repro.sim.run import SimConfig, simulate_schedule
+                depth = _pipeline_depth_for(design) if pipelined else 1
+                events = max(sim_events, 3 * depth)
+                res = simulate_schedule(
+                    sched, p=p, config=SimConfig(events=events, trace=False,
+                                                 pipeline_depth=depth))
+                measured = (res.steady_throughput_eps() if pipelined
+                            else res.throughput_eps())
+                if pipelined:
+                    eps_pipe_cont = measured
+                else:
+                    eps_cont = measured
         points.append(ThroughputPoint(
             tenant=model.name, replicas=len(sched.instances),
             latency_ns=design.latency.total_ns,
@@ -455,12 +545,22 @@ def throughput_frontier(model: ModelSpec, *,
             tiles_per_replica=design.mapping.total_tiles,
             tiles_total=sched.total_tiles,
             plio_ports=sched.plio_ports_used, schedule=sched,
-            events_per_sec_contended=eps_cont, contention=contention))
+            events_per_sec_contended=eps_cont, contention=contention,
+            interval_ns=design.interval_ns or design.latency.total_ns,
+            events_per_sec_pipelined=eps_pipe_free,
+            events_per_sec_pipelined_contended=eps_pipe_cont))
     # Pareto over {latency, throughput} using the *requested* throughput
     # model: once contention is priced, a packing that stacks fewer boxes
-    # per shim column can dominate one with higher congestion-free eps.
-    metric = ((lambda pt: pt.events_per_sec) if contention == "none"
-              else (lambda pt: pt.events_per_sec_contended))
+    # per shim column can dominate one with higher congestion-free eps, and
+    # once pipelining is priced, a deep-pipeline design with fewer replicas
+    # can dominate a wide serial packing.
+    if pipelined:
+        metric = ((lambda pt: pt.events_per_sec_pipelined)
+                  if contention == "none"
+                  else (lambda pt: pt.events_per_sec_pipelined_contended))
+    else:
+        metric = ((lambda pt: pt.events_per_sec) if contention == "none"
+                  else (lambda pt: pt.events_per_sec_contended))
     return dse.pareto_front(points,
                             lambda pt: (pt.latency_ns, -metric(pt)))
 
@@ -485,9 +585,15 @@ def pack_mix(mix: Sequence[Tuple[str, ModelSpec, int]], *,
                         top_k=top_k)
         if not fr or count < 1:
             return None
-        frontiers.append(fr)
-    # index into each tenant's frontier (frontier is tiles-ascending;
-    # start at the latency-optimal = largest design).
+        # Back-off ladder: the {tiles, latency} sub-frontier of the grown
+        # {tiles, latency, II} frontier — unique tile counts, latency
+        # strictly improving with size, so stepping down the ladder always
+        # frees tiles. (Same-tile II alternatives matter for throughput
+        # ranking, not for fitting a mix.)
+        frontiers.append(dse.pareto_front(
+            fr, lambda d: (d.mapping.total_tiles, d.latency.total)))
+    # index into each tenant's ladder (tiles-ascending; start at the
+    # latency-optimal = largest design).
     idx = [len(fr) - 1 for fr in frontiers]
     while True:
         designs: List[Tuple[str, DSEResult]] = []

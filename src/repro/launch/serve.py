@@ -15,8 +15,12 @@ Multi-tenant serving (beyond the paper — see repro.core.tenancy): with
 ``--replicas N`` the model is deployed behind a ``FleetServer`` with N
 replica kernels; ``--mix a,b`` deploys several models side by side, the
 software analogue of packing tenant rectangles onto the shared AIE array.
-The driver then also reports the Tier-A modeled multi-tenant schedule
-(replica packing, shared PLIO budget, modeled events/sec).
+Events are dispatched *micro-batched*: sliced across replicas, scattered,
+gathered back with batched percentiles. The driver then also reports the
+Tier-A modeled multi-tenant schedule (replica packing, shared PLIO budget)
+with both the serial R/latency events/sec and the pipelined headline —
+initiation interval II, sustained events/sec, and the contended pipelined
+throughput-frontier point the deployment should be measured against.
 
     PYTHONPATH=src python -m repro.launch.serve --model deepsets-32 --events 256
     PYTHONPATH=src python -m repro.launch.serve --replicas 4
@@ -149,26 +153,22 @@ def _serve_fleet(preps: dict, args) -> None:
         x, y = jet_batch(prep["jc"], args.events, 999)
         xq = np.clip(np.round(x / 2.0 ** prep["e_in"]), -128,
                      127).astype(np.int8)
-        # Submit the whole stream before waiting so replicas actually run
-        # concurrently (blocking per-event infer() would serialize the fleet
-        # and measure single-server throughput).
-        reqs = [fleet.submit(xq[i], tenant=name) for i in range(args.events)]
-        correct = 0
-        for i, req in enumerate(reqs):
-            if not req.event.wait(120):
-                raise TimeoutError(f"event {i} for tenant {name} timed out")
-            pred = int(np.argmax(req.result[..., :prep["n_classes"]]))
-            correct += int(pred == y[i])
-        acc_q = correct / args.events
-        st = fleet.stats(name)
-        counts = fleet.replica_counts(name)
+        # Micro-batched dispatch: the event stream is sliced across the
+        # tenant's replicas (scatter), each slice rides one replica's
+        # batching window as a single kernel launch, results gather back in
+        # submission order — replicas run concurrently back to back instead
+        # of one round trip per event.
+        br = fleet.infer_batch(xq, tenant=name, timeout=120)
+        preds = np.array([int(np.argmax(r[..., :prep["n_classes"]]))
+                          for r in br.results])
+        acc_q = float((preds == y[:args.events]).mean())
         print(f"[fleet] {name}: float acc {prep['acc_float']:.3f}, "
               f"INT8 acc {acc_q:.3f}")
-        print(f"[fleet] {name}: measured p50 {st.percentile(50):.0f} us, "
-              f"p99 {st.percentile(99):.0f} us, "
-              f"{st.throughput_eps():.0f} events/s over "
-              f"{len(counts)} replicas (dispatched {counts}, "
-              f"total {sum(counts)})")
+        print(f"[fleet] {name}: batched p50 {br.percentile(50):.0f} us, "
+              f"p99 {br.percentile(99):.0f} us, "
+              f"{br.throughput_eps:.0f} events/s over "
+              f"{len(br.replica_counts)} replicas "
+              f"(scatter {br.replica_counts}, total {br.n})")
     modeled = fleet.modeled_throughput()
     fleet.close()
     for name, m in modeled.items():
@@ -177,12 +177,27 @@ def _serve_fleet(preps: dict, args) -> None:
                   f"instances, {m['tiles']} tiles "
                   f"({100 * m['utilization']:.0f}% of array), "
                   f"{m['plio_ports']} PLIO ports, "
-                  f"{m['modeled_eps'] / 1e6:.2f} Meps modeled")
+                  f"{m['modeled_eps'] / 1e6:.2f} Meps serial / "
+                  f"{m['modeled_eps_pipelined_contended'] / 1e6:.2f} Meps "
+                  f"pipelined contended")
         else:
             print(f"[fleet] Tier-A {name}: {m['replicas']} replicas @ "
                   f"{m['latency_ns']:.0f} ns -> "
-                  f"{m['events_per_sec'] / 1e6:.2f} Meps "
+                  f"{m['events_per_sec'] / 1e6:.2f} Meps serial "
                   f"(feasible={m['feasible']})")
+            if "interval_ns" in m:
+                print(f"[fleet] Tier-A {name} pipelined: II "
+                      f"{m['interval_ns']:.0f} ns -> "
+                      f"{m['events_per_sec_pipelined'] / 1e6:.2f} Meps free, "
+                      f"{m.get('events_per_sec_pipelined_contended', 0.0) / 1e6:.2f}"
+                      f" Meps shim-contended")
+            fp = m.get("frontier_point")
+            if fp:
+                print(f"[fleet] Tier-A {name} frontier target: "
+                      f"{fp['replicas']} replicas @ {fp['latency_ns']:.0f} ns"
+                      f" / II {fp['interval_ns']:.0f} ns -> "
+                      f"{fp['events_per_sec_pipelined_contended'] / 1e6:.2f} "
+                      f"Meps sustained ({fp['contention']} contention)")
 
 
 def main() -> None:

@@ -80,6 +80,12 @@ class _Request:
     t_submit: float
     event: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Optional[np.ndarray] = None
+    t_done: Optional[float] = None
+
+    @property
+    def latency_us(self) -> float:
+        return ((self.t_done - self.t_submit) * 1e6
+                if self.t_done is not None else 0.0)
 
 
 class JetServer:
@@ -175,6 +181,7 @@ class JetServer:
             t_done = time.perf_counter()
             for i, r in enumerate(batch):
                 r.result = out[i]
+                r.t_done = t_done
                 self.stats.record(r.t_submit, t_done)
                 r.event.set()
             self.stats.batch_sizes.append(len(batch))

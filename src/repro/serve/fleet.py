@@ -10,14 +10,30 @@ Incoming events are dispatched round-robin or least-loaded across the
 tenant's replicas, multiplying throughput at constant per-event latency,
 exactly the trade the spatial packer makes in tiles.
 
+Two dispatch granularities:
+
+  * :meth:`FleetServer.submit` — one event at a time, the trigger-stream
+    case.
+  * :meth:`FleetServer.infer_batch` — micro-batched dispatch: a batch is
+    *sliced* across the tenant's replicas (scatter), every slice rides one
+    replica's batching window as a single kernel launch, and results are
+    gathered back in submission order with per-event latencies and batched
+    percentiles (:class:`BatchResult`). This is the serving analogue of
+    pipelined ingest: replicas stay busy back to back instead of waiting
+    for a round trip per event.
+
 The fleet reports *measured* wall-clock percentiles and events/sec (merged
 across replicas, plus per-replica dispatch accounting) side by side with the
-*modeled* Tier-A numbers for the same replica count on the VEK280, so the
-interpret-mode CPU run and the analytical hardware story stay comparable.
+*modeled* Tier-A numbers for the same replica count on the VEK280 — since
+the pipelined execution model, both the serial ``R / latency`` figures and
+the contended pipelined frontier point ({latency, II, sustained events/sec}
+from :func:`repro.core.tenancy.throughput_frontier`), so the interpret-mode
+CPU run and the analytical hardware story stay comparable.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -26,6 +42,39 @@ from repro.core import dse, tenancy
 from repro.core.layerspec import ModelSpec
 from repro.quant import QuantizedMLP
 from repro.serve import JetServer, ServeStats, _Request
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Gathered result of one micro-batched dispatch.
+
+    ``results`` preserves submission order regardless of which replica
+    served each slice; ``stats`` holds the batch's own latencies (batched
+    percentiles over exactly these events, not the server's lifetime), and
+    ``replica_counts`` records the scatter (events per replica).
+    """
+
+    results: np.ndarray
+    stats: ServeStats
+    wall_us: float
+    replica_counts: List[int]
+
+    @property
+    def n(self) -> int:
+        return len(self.stats.latencies_us)
+
+    def percentile(self, p: float) -> float:
+        return self.stats.percentile(p)
+
+    @property
+    def throughput_eps(self) -> float:
+        return self.n / (self.wall_us * 1e-6) if self.wall_us > 0 else 0.0
+
+    def summary(self) -> dict:
+        return {"n": self.n, "p50_us": self.percentile(50),
+                "p99_us": self.percentile(99), "wall_us": self.wall_us,
+                "throughput_eps": self.throughput_eps,
+                "replica_counts": list(self.replica_counts)}
 
 
 @dataclasses.dataclass
@@ -114,6 +163,73 @@ class FleetServer:
             raise TimeoutError("fleet inference timed out")
         return req.result
 
+    # -- micro-batched dispatch ----------------------------------------------
+    def submit_batch(self, xs: Sequence[np.ndarray],
+                     tenant: Optional[str] = None) -> List[_Request]:
+        """Scatter a batch across the tenant's replicas.
+
+        The batch is split into one contiguous slice per replica (balanced
+        sizes); slice ``i`` is enqueued on replica ``i`` back to back, so
+        each replica's collection window coalesces its whole slice into a
+        single kernel launch instead of one launch per round trip. Returns
+        the requests in submission order (use :meth:`gather`).
+        """
+        name = tenant or self._default
+        if name not in self._servers:
+            raise KeyError(f"unknown tenant {name!r}")
+        servers = self._servers[name]
+        n = len(xs)
+        if n == 0:
+            return []
+        reqs: List[Optional[_Request]] = [None] * n
+        for i, idxs in enumerate(self._scatter(n, len(servers))):
+            for j in idxs:
+                reqs[j] = servers[i].submit(xs[j])
+                self._dispatched[name][i] += 1
+        return reqs
+
+    @staticmethod
+    def _scatter(n: int, n_replicas: int) -> List[np.ndarray]:
+        """Deterministic scatter: one balanced contiguous slice per replica."""
+        return np.array_split(np.arange(n), min(n_replicas, n))
+
+    def gather(self, reqs: Sequence[_Request],
+               timeout: float = 30.0) -> np.ndarray:
+        """Wait for every request and stack results in submission order."""
+        if not reqs:
+            return np.empty((0,))
+        for i, req in enumerate(reqs):
+            if not req.event.wait(timeout):
+                raise TimeoutError(f"batched event {i} timed out")
+        return np.stack([req.result for req in reqs])
+
+    def infer_batch(self, xs: Sequence[np.ndarray],
+                    tenant: Optional[str] = None,
+                    timeout: float = 30.0) -> BatchResult:
+        """Micro-batched scatter/gather dispatch with batched percentiles."""
+        name = tenant or self._default
+        if name not in self._servers:
+            raise KeyError(f"unknown tenant {name!r}")
+        if len(xs) == 0:
+            return BatchResult(results=np.empty((0,)), stats=ServeStats(),
+                               wall_us=0.0,
+                               replica_counts=[0] * len(self._servers[name]))
+        t0 = time.perf_counter()
+        reqs = self.submit_batch(xs, tenant=name)
+        results = self.gather(reqs, timeout=timeout)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        stats = ServeStats()
+        for req in reqs:
+            stats.record(req.t_submit, req.t_done)
+        # this batch's own scatter, recomputed from the deterministic split
+        # (the shared dispatch counters may be moved concurrently by other
+        # callers, so a before/after snapshot of them would race).
+        servers = self._servers[name]
+        counts = [len(ix) for ix in self._scatter(len(xs), len(servers))]
+        counts += [0] * (len(servers) - len(counts))
+        return BatchResult(results=results, stats=stats, wall_us=wall_us,
+                           replica_counts=counts)
+
     def close(self) -> None:
         for servers in self._servers.values():
             for s in servers:
@@ -164,16 +280,24 @@ class FleetServer:
         return {"fleet": fleet, "tenants": per_tenant}
 
     # -- Tier-A modeled throughput on the VEK280 ------------------------------
-    def modeled_throughput(self) -> dict:
+    def modeled_throughput(self, *, contention: str = "analytic",
+                           frontier: bool = True) -> dict:
         """Pack each tenant's deployed replica count onto the modeled array.
 
         Schedules the fleet's tenant mix with :func:`repro.core.tenancy.
         pack_mix` (which starts at every tenant's latency-optimal §5.2 design
         and backs off along the {tiles, latency} frontier until the mix
-        fits), then reports per-tenant modeled {latency_ns, events_per_sec,
-        tiles}. ``feasible`` is False only when even the smallest designs do
-        not fit the 304-tile grid / shared PLIO budget at the deployed
-        replica counts. Tenants without a ``model_spec`` are skipped.
+        fits), then reports per-tenant modeled {latency_ns, interval_ns,
+        serial events_per_sec, pipelined events_per_sec free + shim-
+        contended}. With ``frontier`` (default) each tenant also carries
+        ``frontier_point``: the contended *pipelined* throughput-frontier
+        point (:func:`repro.core.tenancy.throughput_frontier`, priced by
+        ``contention`` — "analytic" or "sim") at the deployed replica
+        count, or the nearest frontier point below it — the hardware-side
+        target the measured percentiles should sit next to. ``feasible`` is
+        False only when even the smallest designs do not fit the 304-tile
+        grid / shared PLIO budget at the deployed replica counts. Tenants
+        without a ``model_spec`` are skipped.
         """
         mix = [(name, t.model_spec, t.replicas)
                for name, t in self.tenants.items() if t.model_spec is not None]
@@ -185,18 +309,38 @@ class FleetServer:
             for name, spec, r in mix:
                 best = dse.explore(spec)
                 lat_ns = best.latency.total_ns if best else float("nan")
+                ii_ns = (best.interval_ns or lat_ns) if best else float("nan")
                 out[name] = {"replicas": r, "latency_ns": lat_ns,
+                             "interval_ns": ii_ns,
                              "events_per_sec": (r * 1e9 / lat_ns) if best else 0.0,
+                             "events_per_sec_pipelined":
+                                 (r * 1e9 / ii_ns) if best else 0.0,
                              "feasible": False}
             return out
-        for name, insts in sched.per_tenant().items():
-            lat_ns = max(i.latency_ns for i in insts)
-            out[name] = {
-                "replicas": len(insts),
-                "latency_ns": lat_ns,
-                "events_per_sec": sum(1e9 / i.latency_ns for i in insts),
-                "tiles": sum(i.tiles for i in insts),
-                "feasible": True,
-            }
+        scp = sched.shim_contention(pipelined=True)
+        per_tenant: Dict[str, dict] = {}
+        for inst, factor in zip(sched.instances, scp.factors):
+            t = per_tenant.setdefault(inst.tenant, {
+                "replicas": 0, "latency_ns": 0.0, "interval_ns": 0.0,
+                "events_per_sec": 0.0, "events_per_sec_pipelined": 0.0,
+                "events_per_sec_pipelined_contended": 0.0, "tiles": 0,
+                "feasible": True})
+            t["replicas"] += 1
+            t["latency_ns"] = max(t["latency_ns"], inst.latency_ns)
+            t["interval_ns"] = max(t["interval_ns"], inst.interval_ns)
+            t["events_per_sec"] += 1e9 / inst.latency_ns
+            t["events_per_sec_pipelined"] += 1e9 / inst.interval_ns
+            t["events_per_sec_pipelined_contended"] += (factor * 1e9
+                                                        / inst.interval_ns)
+            t["tiles"] += inst.tiles
+        out.update(per_tenant)
+        if frontier:
+            for name, spec, r in mix:
+                fr = tenancy.throughput_frontier(spec, contention=contention)
+                at_or_below = [pt for pt in fr if pt.replicas <= r]
+                pick = (max(at_or_below, key=lambda pt: pt.replicas)
+                        if at_or_below else (fr[0] if fr else None))
+                if pick is not None:
+                    out[name]["frontier_point"] = pick.as_dict()
         out["_fleet"] = sched.summary()
         return out

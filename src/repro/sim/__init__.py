@@ -4,7 +4,14 @@ Fidelity tiers of this repo:
 
   * **Tier-A** (:mod:`repro.core.perfmodel`): the paper's closed-form
     Eq. (1)-(6) latency model, calibrated to Table 2 / Table 4. Congestion
-    free by construction — it scores one instance in isolation.
+    free by construction — it scores one instance in isolation. Two
+    throughput readings per design: the serial ``1 / latency`` rate, and
+    the pipelined ``1 / II`` rate where II =
+    :func:`repro.core.perfmodel.initiation_interval_cycles` is the
+    bottleneck stage of the per-instance schedule (shim ingest+egress,
+    per-layer bottleneck-tile occupancy, inter-layer edges). II <= latency
+    always; the gap is the throughput a serial execution model leaves on
+    the table.
   * **Tier-S** (this package): a discrete-event simulation that *executes*
     a placed design event by event on a resource model of the 8 x 38 array
     — per-tile compute occupancy from the Tier-A per-layer cycle model
@@ -14,6 +21,20 @@ Fidelity tiers of this repo:
     column. For a single tenant it reproduces the analytic end-to-end
     latency; for multi-tenant schedules it prices the ingest contention the
     analytic model ignores.
+
+**pipeline_depth semantics** (:class:`repro.sim.run.SimConfig`): the
+maximum number of in-flight events per instance. Depth 1 (default) is the
+strictly serial execution model — event ``e+1`` is admitted only when
+event ``e`` has fully egressed, reproducing the pre-pipelining Tier-S
+numbers bit for bit. Depth ``d > 1`` admits event ``e+1`` once event
+``e-d+1`` completes, so consecutive events overlap on the FIFO resources
+(next ingest during current compute); single-tenant steady-state
+throughput (:meth:`repro.sim.run.SimResult.steady_throughput_eps`, fill
+and drain transients trimmed) converges to ``1 / II``, and shim sharing
+between tenants throttles the sustained interval rather than only the
+latency. Arrival and completion order per instance are preserved at any
+depth; a depth that at least covers ``ceil(latency / II) + 1`` keeps the
+bottleneck stage saturated.
 
 Entry points: :func:`repro.sim.run.simulate_placement`,
 :func:`repro.sim.run.simulate_schedule`, :func:`repro.sim.run.rescorer`

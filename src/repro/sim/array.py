@@ -75,3 +75,6 @@ class ArrayResources:
 
     def shim_resources(self) -> Dict[object, Resource]:
         return dict(self._shim)
+
+    def edge_resources(self) -> Dict[str, Resource]:
+        return dict(self._edges)

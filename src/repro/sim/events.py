@@ -111,6 +111,20 @@ class Resource:
     def busy_cycles(self) -> float:
         return sum(e - s for _, s, e, _ in self.spans)
 
+    def utilization(self, t0: float = 0.0,
+                    t1: Optional[float] = None) -> float:
+        """Busy fraction of the window [t0, t1] (t1 defaults to the last
+        span end). Spans never overlap on one resource, so a plain clipped
+        sum is exact. A pipelined run's bottleneck resource approaches 1.0
+        while the serial execution model leaves every stage mostly idle."""
+        if t1 is None:
+            t1 = max((e for _, _, e, _ in self.spans), default=0.0)
+        if t1 <= t0:
+            return 0.0
+        busy = sum(min(e, t1) - max(s, t0)
+                   for _, s, e, _ in self.spans if e > t0 and s < t1)
+        return busy / (t1 - t0)
+
 
 class Task:
     """One activity of the DAG. Build via :meth:`TaskGraph.task`."""

@@ -15,16 +15,26 @@ Fig. 9-style sim-vs-model report in ``benchmarks/sim_vs_model.py`` checks
 this. What the simulator *adds* is resources: shim columns are capacity-1
 servers shared by every co-resident tenant whose bounding box covers them,
 so multi-tenant ingest serializes and the measured events/sec fall below
-the congestion-free ``R / latency`` the Tier-A throughput model assumes.
+the congestion-free rate the Tier-A throughput model assumes.
 
-Events within one instance are strictly serial (event e+1 arrives when
-event e completes), matching the Tier-A throughput model's non-pipelined
-``1 / latency`` per-replica rate in the uncontended case.
+**Pipelining.** ``SimConfig.pipeline_depth`` bounds the events in flight
+per instance. Depth 1 (default) is the strictly serial pre-pipelining
+model: event ``e+1`` arrives only when event ``e`` completes, matching the
+``1 / latency`` per-replica rate. Depth ``d > 1`` admits event ``e+1`` as
+soon as event ``e-d+1`` has completed, so stages overlap across events on
+the FIFO resources they already occupy — the task graph no longer
+serializes event ``e+1`` behind event ``e``'s final egress. Single-tenant
+steady-state throughput then converges to ``1 / II`` where II is
+:func:`repro.core.perfmodel.initiation_interval_cycles` (the bottleneck
+stage), and under multi-tenancy the shared shim columns throttle the
+sustained *interval*, not just the latency. The dataflow latency of each
+event is unchanged — measured arrival-to-completion latency can exceed it
+by queueing time whenever admission outpaces the bottleneck stage — and
+arrival order and completion order are both preserved.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 import random
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -43,6 +53,8 @@ class SimConfig:
     """Knobs of one simulation run (all cycle quantities in AIE cycles)."""
 
     events: int = 1                #: events to push through each instance
+    pipeline_depth: int = 1        #: max in-flight events per instance;
+                                   #: 1 = strictly serial (pre-pipelining)
     shim_contention: bool = True   #: serialize shared shim columns (Tier-S);
                                    #: False = congestion-free counterfactual
     shim_streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL
@@ -81,6 +93,39 @@ class InstanceSim:
         return len(self.latencies) / (self.span_cycles * aie_arch.NS_PER_CYCLE
                                       * 1e-9)
 
+    @property
+    def completion_cycles(self) -> List[float]:
+        """Completion time of every event, in arrival order."""
+        return [rec["done"].end for rec in self.event_tasks]
+
+    def steady_interval_cycles(self, *, warmup: Optional[int] = None,
+                               drain: Optional[int] = None) -> float:
+        """Mean completion-to-completion interval in the steady state.
+
+        The first ``warmup`` and last ``drain`` completions (default: a
+        quarter each) are discarded: the head measures the pipeline-fill
+        transient, and the tail measures the drain, where the bottleneck
+        stage no longer sees new ingest and completions come out faster
+        than it can sustain. For a single pipelined tenant the middle
+        window converges to the congestion-free
+        ``initiation_interval_cycles``; under shim contention it measures
+        the *throttled* interval the instance actually sustains.
+        """
+        done = self.completion_cycles
+        if len(done) < 2:
+            return self.span_cycles
+        w = warmup if warmup is not None else len(done) // 4
+        d = drain if drain is not None else len(done) // 4
+        w = min(w, len(done) - 2)
+        last = max(w + 1, len(done) - 1 - d)
+        return (done[last] - done[w]) / (last - w)
+
+    def steady_eps(self, *, warmup: Optional[int] = None,
+                   drain: Optional[int] = None) -> float:
+        """Steady-state events/sec (reciprocal of the sustained interval)."""
+        return 1e9 / aie_arch.ns(
+            self.steady_interval_cycles(warmup=warmup, drain=drain))
+
 
 @dataclasses.dataclass
 class SimResult:
@@ -107,12 +152,55 @@ class SimResult:
     def throughput_eps(self) -> float:
         return sum(i.events_per_sec for i in self.instances)
 
+    def steady_throughput_eps(self, *, warmup: Optional[int] = None,
+                              drain: Optional[int] = None) -> float:
+        """Fleet steady-state events/sec (fill/drain transients discarded).
+
+        Measured on the *merged* completion stream across instances, not as
+        a sum of per-instance window estimates: under shim contention FIFO
+        queueing makes one instance's completions arrive in bursts, which
+        biases any per-instance interval window, while the merged stream's
+        middle-window rate is the aggregate the fleet actually sustains.
+        For one uncontended instance it converges to ``1 / II``; for
+        contended schedules it is the measured counterpart of
+        ``ArraySchedule.contended_eps(pipelined=True)``.
+        """
+        done = sorted(t for i in self.instances
+                      for t in i.completion_cycles)
+        n = len(done)
+        if n < 2:
+            return self.throughput_eps()
+        w = warmup if warmup is not None else n // 4
+        d = drain if drain is not None else n // 4
+        w = min(w, n - 2)
+        last = max(w + 1, n - 1 - d)
+        interval = (done[last] - done[w]) / (last - w)
+        return 1e9 / aie_arch.ns(interval)
+
     def per_instance_eps(self) -> Dict[str, float]:
         return {i.label: i.events_per_sec for i in self.instances}
 
     def shim_wait_cycles(self) -> float:
         """Total cycles transfers spent queued behind other tenants."""
         return sum(r.wait_cycles for r in self.arr.shim_resources().values())
+
+    def bottleneck(self) -> Tuple[str, float]:
+        """(resource name, utilization) of the busiest physical resource.
+
+        Utilization is measured over the run's makespan across tiles, shim
+        columns, and inter-layer edges. In a deep-pipelined steady state
+        the bottleneck's utilization approaches 1.0 and names the stage
+        that sets the initiation interval.
+        """
+        res = {**self.arr.tile_resources(), **self.arr.shim_resources(),
+               **self.arr.edge_resources()}
+        end = self.makespan_cycles
+        best_name, best_util = "", 0.0
+        for r in res.values():
+            u = r.utilization(0.0, end)
+            if u > best_util:
+                best_name, best_util = r.name, u
+        return best_name, best_util
 
 
 def _split(nbytes: int, n: int) -> List[int]:
@@ -129,21 +217,32 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
     mm = placement.model_mapping
     maps = mm.mappings
     links = placement.cascade_links()
-    dists = placement.dma_distances()
+    ecs = perfmodel.edge_comms(placement, p=p, ideal=cfg.ideal)
     cols, t_in, t_out = shim_transfer_cycles(
         placement, p=p, streams_per_col=cfg.shim_streams_per_col,
         ideal=cfg.ideal)
     in_bytes = maps[0].layer.in_bytes
     out_bytes = maps[-1].layer.out_bytes
 
-    prev_done: Optional[Task] = None
+    depth = max(1, cfg.pipeline_depth)
+    roots: List[Task] = []
+    dones: List[Task] = []
     ev_tasks: List[Dict[str, object]] = []
     for e in range(n_events):
         ev = f"{label}.e{e}"
         jit = rng.uniform(0.0, cfg.jitter_cycles) if cfg.jitter_cycles > 0 else 0.0
         root = g.task(f"{ev}.arrive", delay=jit, record=False)
-        if prev_done is not None:
-            root.after(prev_done)
+        # Pipelined admission: at most ``depth`` events in flight. Event e
+        # waits for event e-depth to complete (depth 1 = the strictly
+        # serial pre-pipelining graph, where e waits on e-1's egress) and,
+        # when overlap is allowed, on the previous arrival so the arrival
+        # order — and with it, via FIFO resources, the completion order —
+        # is preserved.
+        if e >= depth:
+            root.after(dones[e - depth])
+        if e > 0 and depth > 1:
+            root.after(roots[e - 1])
+        roots.append(root)
         rec: Dict[str, object] = {"root": root, "ingest": [], "edges": [],
                                   "layers": [], "egress": []}
         cur = root
@@ -169,23 +268,14 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
             if i == len(maps) - 1:
                 cur = ldone
                 continue
-            # inter-layer edge, mirroring perfmodel.end_to_end_cycles
-            nxt = maps[i + 1]
-            data = m.layer.out_bytes
-            if links[i]:
-                kind = "sharedmem" if nxt.layer.kind == "agg" else "cascade"
-                dur = perfmodel.cascade_comm_cycles(p=p, ideal=cfg.ideal)
-            else:
-                kind = "dma"
-                n_streams = max(1, min(m.A * m.C, nxt.A * nxt.B))
-                dur = perfmodel.dma_comm_cycles(
-                    math.ceil(data / n_streams) * n_streams, dists[i],
-                    n_streams=n_streams, p=p, ideal=cfg.ideal)
-            edge = g.task(f"{ev}.{lname}>{kind}",
-                          resource=arr.edge(f"{label}.L{i}>L{i + 1}", kind),
-                          duration=dur, bytes=data, args={"ev": ev}
-                          ).after(ldone)
-            rec["edges"].append((kind, edge, data))
+            # inter-layer edge, priced once by perfmodel.edge_comms (the
+            # same EdgeComm the analytic sum and the pipeline stages use)
+            ec = ecs[i]
+            edge = g.task(f"{ev}.{lname}>{ec.kind}",
+                          resource=arr.edge(f"{label}.L{i}>L{i + 1}", ec.kind),
+                          duration=ec.cycles, bytes=ec.data_bytes,
+                          args={"ev": ev}).after(ldone)
+            rec["edges"].append((ec.kind, edge, ec.data_bytes))
             cur = edge
         if cfg.include_plio:
             egress = [g.task(f"{ev}.store", resource=arr.shim(c, label),
@@ -195,7 +285,7 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
             rec["egress"] = egress
             cur = g.task(f"{ev}.done", record=False).after(*egress)
         rec["done"] = cur
-        prev_done = cur
+        dones.append(cur)
         ev_tasks.append(rec)
     return InstanceSim(label=label, tenant=tenant, replica=replica,
                        placement=placement, event_tasks=ev_tasks)

@@ -146,6 +146,51 @@ class TestFleetServer:
         finally:
             fleet.close()
 
+    def test_infer_batch_scatter_gather(self, qmlp):
+        """Micro-batched dispatch: results in submission order and equal to
+        per-event dispatch; the scatter covers every replica."""
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=3)])
+        single = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                         replicas=1)])
+        try:
+            xs = _events(jc, 9, q.e_in)
+            br = fleet.infer_batch(xs)
+            assert br.results.shape[0] == 9
+            assert br.n == 9
+            assert br.replica_counts == [3, 3, 3]
+            assert sum(fleet.replica_counts("m")) == 9
+            assert br.percentile(50) > 0 and br.percentile(99) > 0
+            assert br.throughput_eps > 0
+            assert br.summary()["n"] == 9
+            for i in range(9):
+                np.testing.assert_array_equal(
+                    np.asarray(br.results[i]), np.asarray(single.infer(xs[i])))
+        finally:
+            fleet.close()
+            single.close()
+
+    def test_infer_batch_smaller_than_fleet(self, qmlp):
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=4)])
+        try:
+            xs = _events(jc, 2, q.e_in)
+            br = fleet.infer_batch(xs)
+            assert br.n == 2 and br.results.shape[0] == 2
+            assert sum(br.replica_counts) == 2
+            assert fleet.submit_batch([]) == []
+            empty = fleet.infer_batch([])
+            assert empty.n == 0 and empty.results.shape[0] == 0
+            assert empty.replica_counts == [0, 0, 0, 0]
+            with pytest.raises(KeyError):
+                fleet.submit_batch(xs, tenant="nope")
+            with pytest.raises(KeyError):
+                fleet.infer_batch(xs, tenant="nope")
+        finally:
+            fleet.close()
+
     def test_bad_args(self, qmlp):
         q, _ = qmlp
         with pytest.raises(ValueError):

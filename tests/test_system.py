@@ -115,6 +115,10 @@ class TestGradientCompression:
         resid = float(jnp.max(jnp.abs(acc - total)))
         assert resid <= float(s) + 1e-6
 
+    @pytest.mark.skipif(
+        not hasattr(jax.sharding, "AxisType"),
+        reason="jax pin lacks jax.sharding.AxisType / make_mesh axis_types; "
+               "reconcile the requirements-dev.txt pin")
     def test_compressed_psum_single_axis(self):
         mesh = jax.make_mesh((1,), ("pod",),
                              axis_types=(jax.sharding.AxisType.Auto,))

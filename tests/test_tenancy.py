@@ -19,17 +19,44 @@ def ds32_frontier():
     return fr
 
 
+def _shim_cap_binds(placement) -> bool:
+    """True when the design's PLIO stream demand exceeds the shim
+    bandwidth of its bounding-box columns (where the analytic uncapped
+    PLIO terms are optimistic and II may exceed the analytic latency)."""
+    maps = placement.model_mapping.mappings
+    first, last = maps[0], maps[-1]
+    cap = aie_arch.SHIM_STREAMS_PER_COL * len(placement.shim_columns())
+    return first.A * first.B > cap or last.A * last.C > cap
+
+
 class TestSearchFrontier:
-    def test_frontier_is_pareto(self, ds32_frontier):
+    def test_frontier_is_pareto_3d(self, ds32_frontier):
+        """No design on the {tiles, latency, II} frontier dominates another."""
         tiles = [d.mapping.total_tiles for d in ds32_frontier]
-        lats = [d.latency.total for d in ds32_frontier]
         assert tiles == sorted(tiles)
-        assert lats == sorted(lats, reverse=True)
-        assert len(set(tiles)) == len(tiles)
+        keys = [(d.mapping.total_tiles, d.latency.total, d.interval_cycles)
+                for d in ds32_frontier]
+        assert len(set(keys)) == len(keys)
+        for a in keys:
+            for b in keys:
+                if a is not b and a != b:
+                    assert not all(x <= y for x, y in zip(a, b)), \
+                        f"{a} dominates {b}"
+
+    def test_interval_filled_and_bounded(self, ds32_frontier):
+        for d in ds32_frontier:
+            assert d.interval_cycles is not None
+            # II <= analytic latency whenever the shim bandwidth cap does
+            # not bind (where it binds, the uncapped analytic PLIO terms
+            # are themselves optimistic and the capped II may exceed them).
+            if not _shim_cap_binds(d.placement):
+                assert 0 < d.interval_cycles <= d.latency.total + 1e-9
+            assert d.interval_ns == pytest.approx(
+                d.interval_cycles * aie_arch.NS_PER_CYCLE)
 
     def test_frontier_contains_explore_best(self, ds32_frontier, ds32_best):
-        assert ds32_frontier[-1].latency.total == pytest.approx(
-            ds32_best.latency.total)
+        best = min(d.latency.total for d in ds32_frontier)
+        assert best == pytest.approx(ds32_best.latency.total)
 
     def test_every_design_fits(self, ds32_frontier):
         for d in ds32_frontier:
@@ -98,13 +125,14 @@ class TestPacking:
 
 class TestThroughputDSE:
     def test_frontier_monotone_and_valid(self):
-        # Default contention="analytic": the frontier is Pareto over
-        # {latency, contended eps}; congestion-free eps is still reported
-        # per point but need not be monotone once contention is priced.
+        # Default pipelined=True, contention="analytic": the frontier is
+        # Pareto over {latency, pipelined contended eps}; the serial rates
+        # are still reported per point but need not be monotone once the
+        # ranking runs on the pipelined basis.
         fr = tenancy.throughput_frontier(layerspec.deepsets_32())
         assert fr
         lats = [pt.latency_ns for pt in fr]
-        eps = [pt.events_per_sec_contended for pt in fr]
+        eps = [pt.events_per_sec_pipelined_contended for pt in fr]
         assert lats == sorted(lats)
         assert eps == sorted(eps)
         for pt in fr:
@@ -112,11 +140,30 @@ class TestThroughputDSE:
             assert len(pt.schedule.instances) == pt.replicas
             assert pt.events_per_sec == pytest.approx(
                 pt.replicas * 1e9 / pt.latency_ns)
+            assert pt.events_per_sec_pipelined == pytest.approx(
+                pt.replicas * 1e9 / pt.interval_ns)
             assert pt.events_per_sec_contended <= pt.events_per_sec + 1e-6
+            assert (pt.events_per_sec_pipelined_contended
+                    <= pt.events_per_sec_pipelined + 1e-6)
+            # pipelining never loses to serial (wherever the shim cap does
+            # not bind — there II <= latency per replica and the contended
+            # pipelined rate is >= the contended serial rate).
+            if not _shim_cap_binds(pt.schedule.instances[0].placement):
+                assert pt.interval_ns <= pt.latency_ns + 1e-9
+                assert (pt.events_per_sec_pipelined_contended
+                        >= pt.events_per_sec_contended - 1e-6)
+                assert pt.pipelined_gain >= 1.0 - 1e-9
+
+    def test_frontier_serial_mode_matches_pr4_semantics(self):
+        fr = tenancy.throughput_frontier(layerspec.deepsets_32(),
+                                         pipelined=False)
+        assert fr
+        eps = [pt.events_per_sec_contended for pt in fr]
+        assert eps == sorted(eps)
 
     def test_frontier_congestion_free_mode_matches_pr1_semantics(self):
         fr = tenancy.throughput_frontier(layerspec.deepsets_32(),
-                                         contention="none")
+                                         contention="none", pipelined=False)
         assert fr
         eps = [pt.events_per_sec for pt in fr]
         assert eps == sorted(eps)
