@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import aie_arch
@@ -148,6 +149,45 @@ def _pareto_insert(frontier: List[Tuple[int, float, tuple]], tiles: int,
     return True
 
 
+class _Telemetry:
+    """Null-safe telemetry shim: no-ops when registry/tracer are absent, so
+    the search pays nothing unless observability was requested."""
+
+    def __init__(self, registry, tracer, model_name: str) -> None:
+        self.reg = registry
+        self.tracer = tracer
+        self.model = model_name
+
+    def count(self, name: str, n: float = 1.0) -> None:
+        if self.reg is not None:
+            self.reg.counter(name, {"model": self.model}).inc(n)
+
+    def gauge(self, name: str, value: float, **labels) -> None:
+        if self.reg is not None:
+            self.reg.gauge(name, {"model": self.model, **labels}).set(value)
+
+    class _Phase:
+        def __init__(self, outer: "_Telemetry", phase: str) -> None:
+            self.outer, self.phase = outer, phase
+
+        def __enter__(self):
+            self.t0 = time.perf_counter()
+            return self
+
+        def __exit__(self, *exc):
+            dt = time.perf_counter() - self.t0
+            o = self.outer
+            o.gauge("dse.walltime_s", dt, phase=self.phase)
+            if o.tracer is not None:
+                end = o.tracer.now_us()
+                o.tracer.span_us("dse", o.model, self.phase,
+                                 end - dt * 1e6, dt * 1e6, cat="dse")
+            return False
+
+    def phase(self, name: str) -> "_Telemetry._Phase":
+        return self._Phase(self, name)
+
+
 def _dp_finals(model: ModelSpec, *,
                rows: int, cols: int, plio: int, dtype: str,
                p: OverheadParams, force_dma: bool,
@@ -263,25 +303,34 @@ def explore(model: ModelSpec, *,
             force_dma: bool = False,
             max_tiles_per_layer: Optional[int] = None,
             top_k: int = 48,
-            include_plio: bool = True) -> Optional[DSEResult]:
-    """Run the §5.2 DSE. ``force_dma=True`` gives the μ-ORCA-DMA ablation."""
-    r = _dp_finals(model, rows=rows, cols=cols, plio=plio, dtype=dtype, p=p,
-                   force_dma=force_dma, max_tiles_per_layer=max_tiles_per_layer,
-                   include_plio=include_plio)
+            include_plio: bool = True,
+            registry=None, tracer=None) -> Optional[DSEResult]:
+    """Run the §5.2 DSE. ``force_dma=True`` gives the μ-ORCA-DMA ablation.
+    ``registry``/``tracer`` record the same search telemetry as
+    :func:`search`."""
+    obs = _Telemetry(registry, tracer, model.name)
+    with obs.phase("dp"):
+        r = _dp_finals(model, rows=rows, cols=cols, plio=plio, dtype=dtype,
+                       p=p, force_dma=force_dma,
+                       max_tiles_per_layer=max_tiles_per_layer,
+                       include_plio=include_plio)
     if r is None:
         return None
     finals, layer_maps, dp_states = r
+    obs.gauge("dse.dp_states", dp_states)
     best: Optional[DSEResult] = None
     scored = 0
-    for est_cost, back in finals[:top_k]:
-        cand = _score_back(model, back, layer_maps, rows=rows, cols=cols,
-                           plio=plio, p=p, force_dma=force_dma,
-                           include_plio=include_plio, dp_states=dp_states)
-        if cand is None:
-            continue
-        scored += 1
-        if best is None or cand.latency.total < best.latency.total:
-            best = cand
+    with obs.phase("score"):
+        for est_cost, back in finals[:top_k]:
+            cand = _score_back(model, back, layer_maps, rows=rows, cols=cols,
+                               plio=plio, p=p, force_dma=force_dma,
+                               include_plio=include_plio, dp_states=dp_states)
+            obs.count("dse.candidates_evaluated")
+            if cand is None:
+                continue
+            scored += 1
+            if best is None or cand.latency.total < best.latency.total:
+                best = cand
     if best is not None:
         best.candidates_scored = scored
     return best
@@ -297,8 +346,8 @@ def search(model: ModelSpec, *,
            max_tiles_per_layer: Optional[int] = None,
            top_k: int = 96,
            include_plio: bool = True,
-           rescore: Optional[Callable[[DSEResult], float]] = None
-           ) -> List[DSEResult]:
+           rescore: Optional[Callable[[DSEResult], float]] = None,
+           registry=None, tracer=None) -> List[DSEResult]:
     """Placement-validated Pareto frontier over {tiles, latency, II}.
 
     Same search as :func:`explore`, but instead of only the latency winner it
@@ -318,33 +367,50 @@ def search(model: ModelSpec, *,
     {tiles, simulated latency} instead of the analytic estimate — designs
     whose analytic rank survives only by ignoring execution effects drop
     off the frontier.
+
+    ``registry`` (a :class:`repro.obs.MetricsRegistry`) and ``tracer``
+    (a :class:`repro.obs.Tracer`) record search telemetry: counters
+    ``dse.candidates_evaluated`` / ``dse.pareto_survivors`` /
+    ``dse.rescore_invocations`` and per-phase wall time ``dse.walltime_s``
+    (phases ``dp``, ``score``, ``rescore``), plus a span per phase on the
+    ``dse`` trace lane.
     """
-    r = _dp_finals(model, rows=rows, cols=cols, plio=plio, dtype=dtype, p=p,
-                   force_dma=force_dma, max_tiles_per_layer=max_tiles_per_layer,
-                   include_plio=include_plio)
+    obs = _Telemetry(registry, tracer, model.name)
+    with obs.phase("dp"):
+        r = _dp_finals(model, rows=rows, cols=cols, plio=plio, dtype=dtype,
+                       p=p, force_dma=force_dma,
+                       max_tiles_per_layer=max_tiles_per_layer,
+                       include_plio=include_plio)
     if r is None:
         return []
     finals, layer_maps, dp_states = r
+    obs.gauge("dse.dp_states", dp_states)
     scored: List[DSEResult] = []
-    for est_cost, back in finals[:top_k]:
-        cand = _score_back(model, back, layer_maps, rows=rows, cols=cols,
-                           plio=plio, p=p, force_dma=force_dma,
-                           include_plio=include_plio, dp_states=dp_states)
-        if cand is not None:
-            scored.append(cand)
+    with obs.phase("score"):
+        for est_cost, back in finals[:top_k]:
+            cand = _score_back(model, back, layer_maps, rows=rows, cols=cols,
+                               plio=plio, p=p, force_dma=force_dma,
+                               include_plio=include_plio, dp_states=dp_states)
+            obs.count("dse.candidates_evaluated")
+            if cand is not None:
+                scored.append(cand)
     for cand in scored:
         cand.candidates_scored = len(scored)
     if rescore is not None:
-        for cand in scored:
-            cand.sim_cycles = float(rescore(cand))
+        with obs.phase("rescore"):
+            for cand in scored:
+                cand.sim_cycles = float(rescore(cand))
+                obs.count("dse.rescore_invocations")
     cost = ((lambda d: d.sim_cycles) if rescore is not None
             else (lambda d: d.latency.total))
     # Pareto filter: keep designs not dominated on (tiles, cost, II). The
     # II axis is what admits deep-pipeline designs that a pure
     # {tiles, latency} filter would discard as dominated.
-    return pareto_front_nd(
+    front = pareto_front_nd(
         scored,
         lambda d: (d.mapping.total_tiles, cost(d), d.interval_cycles))
+    obs.count("dse.pareto_survivors", len(front))
+    return front
 
 
 def _recost_all_dma(placement: Placement, *, p: OverheadParams,

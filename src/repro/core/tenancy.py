@@ -484,7 +484,8 @@ def throughput_frontier(model: ModelSpec, *,
                         max_replicas_cap: Optional[int] = None,
                         contention: str = "analytic",
                         pipelined: bool = True,
-                        sim_events: int = 8) -> List[ThroughputPoint]:
+                        sim_events: int = 8,
+                        registry=None, tracer=None) -> List[ThroughputPoint]:
     """Throughput-aware DSE: sweep the latency/replica-count trade-off.
 
     For every design on the model's {tiles, latency, II} Pareto frontier,
@@ -509,7 +510,7 @@ def throughput_frontier(model: ModelSpec, *,
         raise ValueError(f"unknown contention model {contention!r}")
     points: List[ThroughputPoint] = []
     for design in dse.search(model, rows=rows, cols=cols, plio=plio, p=p,
-                             top_k=top_k):
+                             top_k=top_k, registry=registry, tracer=tracer):
         sched = pack_max_replicas(design, rows=rows, cols=cols, plio=plio,
                                   cap=max_replicas_cap)
         if sched is None:
@@ -561,8 +562,14 @@ def throughput_frontier(model: ModelSpec, *,
     else:
         metric = ((lambda pt: pt.events_per_sec) if contention == "none"
                   else (lambda pt: pt.events_per_sec_contended))
-    return dse.pareto_front(points,
-                            lambda pt: (pt.latency_ns, -metric(pt)))
+    front = dse.pareto_front(points,
+                             lambda pt: (pt.latency_ns, -metric(pt)))
+    if registry is not None:
+        registry.counter("tenancy.frontier.candidates",
+                         {"model": model.name}).inc(len(points))
+        registry.counter("tenancy.frontier.points",
+                         {"model": model.name}).inc(len(front))
+    return front
 
 
 def pack_mix(mix: Sequence[Tuple[str, ModelSpec, int]], *,
@@ -570,19 +577,21 @@ def pack_mix(mix: Sequence[Tuple[str, ModelSpec, int]], *,
              cols: int = aie_arch.ARRAY_COLS,
              plio: int = aie_arch.PLIO_PORTS,
              p: OverheadParams = OVERHEADS,
-             top_k: int = 96) -> Optional[ArraySchedule]:
+             top_k: int = 96,
+             registry=None) -> Optional[ArraySchedule]:
     """Schedule a heterogeneous tenant mix ``[(name, model, replicas), ...]``.
 
     Starts every tenant at its latency-optimal design and, while the mix
     does not fit, backs the largest-footprint tenant off to the next smaller
     design on its {tiles, latency} frontier — trading that tenant's latency
     for fleet feasibility. Returns None when even the smallest designs do
-    not fit together.
+    not fit together. ``registry`` records ``tenancy.pack.attempts`` and
+    ``tenancy.pack.backoffs`` counters.
     """
     frontiers: List[List[DSEResult]] = []
     for name, model, count in mix:
         fr = dse.search(model, rows=rows, cols=cols, plio=plio, p=p,
-                        top_k=top_k)
+                        top_k=top_k, registry=registry)
         if not fr or count < 1:
             return None
         # Back-off ladder: the {tiles, latency} sub-frontier of the grown
@@ -602,6 +611,8 @@ def pack_mix(mix: Sequence[Tuple[str, ModelSpec, int]], *,
         # Place big boxes first for denser packing; pack() names replicas
         # per tenant so the interleaving order does not matter.
         designs.sort(key=lambda d: d[1].mapping.total_tiles, reverse=True)
+        if registry is not None:
+            registry.counter("tenancy.pack.attempts").inc()
         sched = pack(designs, rows=rows, cols=cols, plio=plio)
         if sched is not None:
             return sched
@@ -612,3 +623,5 @@ def pack_mix(mix: Sequence[Tuple[str, ModelSpec, int]], *,
         k = max(candidates,
                 key=lambda k: frontiers[k][idx[k]].mapping.total_tiles)
         idx[k] -= 1
+        if registry is not None:
+            registry.counter("tenancy.pack.backoffs").inc()

@@ -143,10 +143,65 @@ def _serve_single(prep: dict, args) -> None:
           f"({r.latency_ns / 1e3:.2f} us) — {r.summary()}")
 
 
+def _report_telemetry(fleet: FleetServer, snap: dict, args) -> None:
+    """Persist the metrics snapshot and print the end-of-run summary."""
+    drift = snap.get("drift", {})
+    if args.metrics_out:
+        fleet.registry.save(args.metrics_out,
+                            extra={"drift": drift, "serve": snap["serve"]})
+        print(f"[fleet] metrics: {len(fleet.registry.all())} series -> "
+              f"{args.metrics_out}")
+    for name, s in snap["serve"]["tenants"].items():
+        if "rolling_p50_us" in s:
+            print(f"[fleet] {name} rolling latency: "
+                  f"p50 {s['rolling_p50_us']:.0f} us, "
+                  f"p90 {s['rolling_p90_us']:.0f} us, "
+                  f"p99 {s['rolling_p99_us']:.0f} us (streaming histogram)")
+    overheads = fleet.registry.all("fleet.dispatch.overhead_us")
+    if overheads:
+        worst = max(h.quantile(0.99) for h in overheads if h.count)
+        print(f"[fleet] dispatch overhead p99: {worst:.1f} us "
+              f"({sum(h.count for h in overheads)} dispatches)")
+    for metric in sorted(drift):
+        d = drift[metric]
+        mape = d.get("mape")
+        if mape is None:
+            continue
+        tag = ("gateable Tier-A-vs-Tier-S" if metric.startswith("model.")
+               else "informational wall-clock-vs-modeled")
+        print(f"[fleet] drift {metric}: MAPE {100 * mape:.2f}% over "
+              f"{len(d['entries'])} entr(ies) [{tag}]")
+
+
+def _check_drift_gate(snap: dict, gate: float) -> None:
+    """Exit nonzero when the model-path (Tier-A vs Tier-S) MAPE exceeds the
+    gate. serve.* drift is never gated: interpret-mode CPU wall clock sits
+    orders of magnitude above the modeled VEK280 by construction."""
+    mapes = [d["mape"] for m, d in snap.get("drift", {}).items()
+             if m.startswith("model.") and d.get("mape") is not None]
+    if not mapes:
+        raise SystemExit("[fleet] drift gate: no model.* drift entries "
+                         "populated (missing model_spec?)")
+    worst = max(mapes)
+    ok = worst <= gate
+    print(f"[fleet] drift gate: worst model-path MAPE {100 * worst:.2f}% "
+          f"vs threshold {100 * gate:.2f}% -> {'PASS' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit(1)
+
+
 def _serve_fleet(preps: dict, args) -> None:
     """Multi-tenant deployment: FleetServer over R replicas per tenant."""
+    tracer = None
+    if args.trace_out:
+        # A ChromeTrace carries both clocks: fleet spans are wall-clock
+        # (span_us), simulator spans are AIE cycles (span) — one timeline.
+        from repro.sim.trace import ChromeTrace
+        tracer = ChromeTrace(meta={"driver": "serve",
+                                   "mix": ",".join(preps),
+                                   "policy": args.policy})
     fleet = FleetServer([p["tenant"] for p in preps.values()],
-                        policy=args.policy, interpret=True)
+                        policy=args.policy, interpret=True, tracer=tracer)
     print(f"\n[fleet] {fleet.num_replicas} replicas across "
           f"{len(preps)} tenant(s), policy={args.policy}")
     for name, prep in preps.items():
@@ -170,7 +225,25 @@ def _serve_fleet(preps: dict, args) -> None:
               f"{len(br.replica_counts)} replicas "
               f"(scatter {br.replica_counts}, total {br.n})")
     modeled = fleet.modeled_throughput()
+    telemetry = (fleet.telemetry_snapshot()
+                 if (args.metrics_out or args.trace_out
+                     or args.drift_gate is not None) else None)
+    if tracer is not None:
+        # Append a short Tier-S run per tenant so simulator task spans land
+        # in the same trace as the fleet's dispatch/slice spans.
+        from repro.sim import run as simrun
+        for name in preps:
+            design = fleet._design(name)
+            if design is not None:
+                simrun.simulate_placement(
+                    design.placement, tenant=name,
+                    config=simrun.SimConfig(events=2), tracer=tracer)
+        tracer.save(args.trace_out)
+        print(f"[fleet] unified trace: {len(tracer.spans())} spans "
+              f"-> {args.trace_out}")
     fleet.close()
+    if telemetry is not None:
+        _report_telemetry(fleet, telemetry, args)
     for name, m in modeled.items():
         if name == "_fleet":
             print(f"[fleet] Tier-A schedule on VEK280: {m['instances']} "
@@ -198,6 +271,8 @@ def _serve_fleet(preps: dict, args) -> None:
                       f" / II {fp['interval_ns']:.0f} ns -> "
                       f"{fp['events_per_sec_pipelined_contended'] / 1e6:.2f} "
                       f"Meps sustained ({fp['contention']} contention)")
+    if args.drift_gate is not None and telemetry is not None:
+        _check_drift_gate(telemetry, args.drift_gate)
 
 
 def main() -> None:
@@ -213,6 +288,16 @@ def main() -> None:
     ap.add_argument("--events", type=int, default=256)
     ap.add_argument("--train-steps", type=int, default=300)
     ap.add_argument("--mode", choices=["fused", "unfused"], default="fused")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the fleet's metrics-registry snapshot "
+                         "(queue depths, dispatch overheads, rolling "
+                         "percentiles, drift ratios) as JSON")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write a unified Chrome trace: fleet dispatch/slice "
+                         "spans + a short Tier-S sim per tenant")
+    ap.add_argument("--drift-gate", type=float, default=None,
+                    help="fail (exit 1) when the Tier-A-vs-Tier-S model-path "
+                         "drift MAPE exceeds this fraction (e.g. 0.05)")
     args = ap.parse_args()
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
@@ -228,9 +313,13 @@ def main() -> None:
     preps = {n: _prepare(n, train_steps=args.train_steps,
                          replicas=args.replicas, mode=args.mode)
              for n in names}
-    if len(names) == 1 and args.replicas == 1:
+    telemetry_requested = (args.metrics_out or args.trace_out
+                           or args.drift_gate is not None)
+    if len(names) == 1 and args.replicas == 1 and not telemetry_requested:
         _serve_single(preps[names[0]], args)
     else:
+        # The telemetry flags route through the fleet path even for one
+        # replica: the registry/tracer/drift plumbing lives there.
         _serve_fleet(preps, args)
 
 

@@ -120,9 +120,13 @@ def main() -> None:
                     help="arrival-jitter RNG seed (reproducible runs)")
     ap.add_argument("--jitter", type=float, default=0.0,
                     help="uniform per-event arrival jitter in cycles")
-    ap.add_argument("--trace", type=str, default=None,
+    ap.add_argument("--trace", "--trace-out", dest="trace", type=str,
+                    default=None,
                     help="Chrome-trace output path "
                          "(default sim_trace_<model|mix>.json)")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the run's metrics-registry snapshot "
+                         "(utilization, queueing, latency histograms) as JSON")
     ap.add_argument("--tier-s", action="store_true",
                     help="also re-rank the DSE frontier by simulated latency")
     args = ap.parse_args()
@@ -154,6 +158,15 @@ def main() -> None:
             for d in fr:
                 print(f"[sim]   {d.mapping.total_tiles:4d} tiles  "
                       f"{d.latency.total_ns:8.1f}  {d.sim_latency_ns:8.1f}")
+
+    if args.metrics_out:
+        reg = res.export_metrics()
+        reg.save(args.metrics_out,
+                 extra={"driver": "simulate",
+                        "workload": args.mix or args.model,
+                        "events": args.events,
+                        "pipeline_depth": args.pipeline_depth})
+        print(f"[sim] metrics: {len(reg.all())} series -> {args.metrics_out}")
 
     path = args.trace or ("sim_trace_%s.json"
                           % (args.mix.replace(",", "+") if args.mix

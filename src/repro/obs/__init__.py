@@ -1,0 +1,80 @@
+"""Unified telemetry layer: metrics, span tracing, and drift monitoring.
+
+The paper's argument is overhead-aware accounting — synchronization, VLIW
+prologue, shim DMA are *priced*, not assumed away. ``repro.obs`` applies
+the same discipline to the runtime stack itself: every layer (the Tier-S
+simulator, the serving fleet, the DSE) emits into one dependency-free
+substrate instead of keeping private ad-hoc counters, and the stack
+cross-checks its measurements against the model that packed it.
+
+Three pieces:
+
+  * :class:`MetricsRegistry` (:mod:`repro.obs.metrics`) — named counters,
+    gauges, and streaming histograms (fixed log buckets + P² quantile
+    estimators), labelled, mergeable across replicas, exported as a JSON
+    snapshot or Prometheus text.
+  * :class:`Tracer` (:mod:`repro.obs.tracing`) — Chrome-trace span
+    recording with stable pid/tid lane conventions. The simulator's
+    :class:`repro.sim.trace.ChromeTrace` is a cycle-clock subclass, so
+    simulator task spans and fleet wall-clock spans land in one timeline.
+  * :class:`DriftMonitor` (:mod:`repro.obs.drift`) — modeled-vs-measured
+    comparison: register the model's expectation per key, stream in
+    measurements, read back per-key drift ratios and a fig9-style MAPE.
+
+Metrics naming scheme
+---------------------
+
+Dot-separated ``subsystem.object.quantity`` names, with dimensions carried
+as labels (never baked into the name):
+
+  ``fleet.replica.queue_depth``      gauge   {tenant, replica}
+  ``fleet.replica.dispatched``       counter {tenant, replica}
+  ``fleet.dispatch.overhead_us``     histogram {tenant} — host-side cost of
+                                     picking a replica + enqueueing
+  ``fleet.request.latency_us``       histogram {tenant} — rolling
+                                     percentiles (P²), not one-shot arrays
+  ``fleet.batch.size``               histogram {tenant}
+  ``fleet.batch.throughput_eps``     gauge   {tenant}
+  ``sim.resource.utilization``       gauge   {resource, kind} — busy
+                                     fraction over the run makespan
+  ``sim.resource.wait_cycles``       gauge   {resource} — queueing behind
+                                     co-resident tenants
+  ``sim.bottleneck.utilization``     gauge   {resource} — the II-setting
+                                     stage
+  ``sim.event.latency_ns``           histogram {instance}
+  ``sim.instance.steady_interval_ns``  gauge {instance}
+  ``dse.candidates_evaluated``       counter {model}
+  ``dse.pareto_survivors``           counter {model}
+  ``dse.rescore_invocations``        counter {model}
+  ``dse.walltime_s``                 gauge   {model, phase: dp|score|rescore}
+  ``tenancy.frontier.points``        counter {model}
+  ``tenancy.pack.backoffs``          counter {}
+
+Drift-ratio semantics
+---------------------
+
+For every (key, metric) pair the monitor stores one *modeled* reference
+(:meth:`DriftMonitor.expect`) and a stream of *measurements*
+(:meth:`DriftMonitor.observe`). ``ratio = measured_mean / modeled``:
+1.0 is perfect agreement, 1.3 means the measurement runs 30% above the
+model. Two families are reported side by side and must not be conflated:
+
+  * ``model.*`` metrics compare Tier-A analytic predictions against
+    Tier-S simulated execution of the *same placement* — both are models
+    of the VEK280, so the ratio should sit at ~1.0 and its MAPE is a
+    CI-gateable regression signal (the ``--drift-gate`` flag).
+  * ``serve.*`` metrics compare the modeled VEK280 numbers against
+    *wall-clock CPU interpret-mode* serving, where the ratio is expected
+    to be orders of magnitude above 1 — it tracks relative drift of the
+    deployment over time, not absolute agreement.
+"""
+from __future__ import annotations
+
+from .drift import DriftEntry, DriftMonitor
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, P2Quantile
+from .tracing import DEFAULT_PIDS, Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "P2Quantile",
+    "Tracer", "DEFAULT_PIDS", "DriftMonitor", "DriftEntry",
+]

@@ -1,0 +1,107 @@
+"""Model-vs-measured drift monitoring (fig9-style error accounting).
+
+For every ``(key, metric)`` pair — e.g. ``("deepsets-32#0",
+"serve.latency_us")`` — the monitor stores one *modeled* reference and a
+stream of *measurements*, then reports ``ratio = measured_mean / modeled``
+per entry and a MAPE (mean absolute percentage error) per metric. See the
+:mod:`repro.obs` docstring for the two metric families (``model.*`` is the
+CI-gateable Tier-A-vs-Tier-S path; ``serve.*`` tracks wall-clock serving
+against the modeled hardware numbers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class DriftEntry:
+    """One (key, metric) comparison: modeled reference vs measured stream."""
+
+    key: str
+    metric: str
+    modeled: Optional[float] = None
+    count: int = 0
+    total: float = 0.0
+    last: Optional[float] = None
+
+    def observe(self, value: float) -> None:
+        self.count += 1
+        self.total += float(value)
+        self.last = float(value)
+
+    @property
+    def measured(self) -> Optional[float]:
+        return self.total / self.count if self.count else None
+
+    @property
+    def ratio(self) -> Optional[float]:
+        """measured_mean / modeled; 1.0 = perfect agreement."""
+        if self.modeled is None or not self.modeled or self.measured is None:
+            return None
+        return self.measured / self.modeled
+
+    @property
+    def ape(self) -> Optional[float]:
+        """|measured - modeled| / modeled (absolute percentage error)."""
+        r = self.ratio
+        return None if r is None else abs(r - 1.0)
+
+    def as_dict(self) -> dict:
+        return {"modeled": self.modeled, "measured": self.measured,
+                "ratio": self.ratio, "ape": self.ape, "n": self.count}
+
+
+class DriftMonitor:
+    """Streaming modeled-vs-measured comparison across keys and metrics."""
+
+    def __init__(self) -> None:
+        self._entries: Dict[Tuple[str, str], DriftEntry] = {}
+
+    def _entry(self, key: str, metric: str) -> DriftEntry:
+        k = (str(key), str(metric))
+        e = self._entries.get(k)
+        if e is None:
+            e = self._entries[k] = DriftEntry(key=k[0], metric=k[1])
+        return e
+
+    def expect(self, key: str, metric: str, modeled: float) -> None:
+        """Register (or refresh) the model's prediction for (key, metric)."""
+        self._entry(key, metric).modeled = float(modeled)
+
+    def observe(self, key: str, metric: str, value: float) -> None:
+        """Stream one measurement in (mean is compared against the model)."""
+        self._entry(key, metric).observe(value)
+
+    # -- queries ---------------------------------------------------------------
+    def entries(self, metric: Optional[str] = None) -> List[DriftEntry]:
+        return [e for (_, m), e in sorted(self._entries.items())
+                if metric is None or m == metric]
+
+    def ratio(self, key: str, metric: str) -> Optional[float]:
+        e = self._entries.get((str(key), str(metric)))
+        return None if e is None else e.ratio
+
+    def metrics(self) -> List[str]:
+        return sorted({m for _, m in self._entries})
+
+    def mape(self, metric: Optional[str] = None) -> Optional[float]:
+        """Mean |measured/modeled - 1| over populated entries (None when no
+        entry has both sides)."""
+        apes = [e.ape for e in self.entries(metric) if e.ape is not None]
+        return sum(apes) / len(apes) if apes else None
+
+    def flagged(self, threshold: float,
+                metric: Optional[str] = None) -> List[DriftEntry]:
+        """Entries whose drift exceeds ``threshold`` (|ratio - 1|)."""
+        return [e for e in self.entries(metric)
+                if e.ape is not None and e.ape > threshold]
+
+    def summary(self) -> dict:
+        """fig9-style report: per-metric MAPE + per-entry ratios."""
+        per_metric: Dict[str, dict] = {}
+        for m in self.metrics():
+            per_metric[m] = {
+                "mape": self.mape(m),
+                "entries": {e.key: e.as_dict() for e in self.entries(m)}}
+        return per_metric

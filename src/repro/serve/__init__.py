@@ -101,12 +101,14 @@ class JetServer:
                  mode: str = "fused",
                  max_batch: int = 64,
                  window_us: float = 200.0,
-                 interpret: bool = True):
+                 interpret: bool = True,
+                 on_done: Optional[Callable[[_Request], None]] = None):
         self.qmlp, self.rho, self.agg = qmlp, rho, agg
         self.mode = mode
         self.max_batch = max_batch
         self.window_us = window_us
         self.interpret = interpret
+        self.on_done = on_done
         self.stats = ServeStats()
         self._q: "queue.Queue[_Request]" = queue.Queue()
         self._stop = threading.Event()
@@ -183,6 +185,13 @@ class JetServer:
                 r.result = out[i]
                 r.t_done = t_done
                 self.stats.record(r.t_submit, t_done)
+                if self.on_done is not None:
+                    # Telemetry must never wedge the worker loop: a raising
+                    # observer would strand every waiter on this queue.
+                    try:
+                        self.on_done(r)
+                    except Exception:
+                        pass
                 r.event.set()
             self.stats.batch_sizes.append(len(batch))
 

@@ -34,12 +34,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import dse, tenancy
+from repro.core import aie_arch, dse, tenancy
 from repro.core.layerspec import ModelSpec
+from repro.obs import DriftMonitor, MetricsRegistry, Tracer
 from repro.quant import QuantizedMLP
 from repro.serve import JetServer, ServeStats, _Request
 
@@ -106,17 +107,30 @@ class FleetServer:
                  policy: str = "least_loaded",
                  max_batch: int = 64,
                  window_us: float = 200.0,
-                 interpret: bool = True):
+                 interpret: bool = True,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         if policy not in ("rr", "least_loaded"):
             raise ValueError(f"unknown dispatch policy {policy!r}")
         if not tenants:
             raise ValueError("at least one tenant required")
         self.policy = policy
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        self.drift = DriftMonitor()
         self.tenants: Dict[str, TenantSpec] = {}
         self._servers: Dict[str, List[JetServer]] = {}
         self._dispatched: Dict[str, List[int]] = {}
         self._rr: Dict[str, int] = {}
         self._default = tenants[0].name
+        self._design_cache: Dict[str, Optional[dse.DSEResult]] = {}
+        # Per-tenant metric handles, resolved once so the dispatch hot path
+        # does no registry lookups.
+        self._m_overhead: Dict[str, object] = {}
+        self._m_batch: Dict[str, object] = {}
+        self._m_tput: Dict[str, object] = {}
+        self._m_dispatched: Dict[str, List[object]] = {}
+        self._m_depth: Dict[str, List[object]] = {}
         # Validate every spec BEFORE building any JetServer: each server
         # starts a worker thread, and a mid-construction raise would leak
         # threads with no handle left to close() them.
@@ -129,13 +143,55 @@ class FleetServer:
             seen.add(t.name)
         for t in tenants:
             self.tenants[t.name] = t
-            self._servers[t.name] = [
+            servers = [
                 JetServer(t.qmlp, rho=t.rho, agg=t.agg, mode=t.mode,
                           max_batch=max_batch, window_us=window_us,
                           interpret=interpret)
                 for _ in range(t.replicas)]
+            self._servers[t.name] = servers
             self._dispatched[t.name] = [0] * t.replicas
             self._rr[t.name] = 0
+            reg = self.registry
+            self._m_overhead[t.name] = reg.histogram(
+                "fleet.dispatch.overhead_us", {"tenant": t.name})
+            self._m_batch[t.name] = reg.histogram(
+                "fleet.batch.size", {"tenant": t.name})
+            self._m_tput[t.name] = reg.gauge(
+                "fleet.batch.throughput_eps", {"tenant": t.name})
+            self._m_dispatched[t.name] = [
+                reg.counter("fleet.replica.dispatched",
+                            {"tenant": t.name, "replica": str(i)})
+                for i in range(t.replicas)]
+            self._m_depth[t.name] = [
+                reg.gauge("fleet.replica.queue_depth",
+                          {"tenant": t.name, "replica": str(i)})
+                for i in range(t.replicas)]
+            for i, s in enumerate(servers):
+                s.on_done = self._replica_observer(t.name, i, s)
+
+    def _replica_observer(self, tenant: str, i: int, server: JetServer):
+        """Per-replica completion hook run on the replica's worker thread.
+
+        Streams the measured latency into the tenant's rolling histogram,
+        refreshes the queue-depth gauge, and feeds the drift monitor's
+        ``serve.latency_us`` stream for replica key ``tenant#i``. Distinct
+        replicas write distinct drift keys, so cross-thread writes never
+        touch the same entry.
+        """
+        lat = self.registry.histogram("fleet.request.latency_us",
+                                      {"tenant": tenant})
+        done = self.registry.counter("fleet.replica.completed",
+                                     {"tenant": tenant, "replica": str(i)})
+        depth = self._m_depth[tenant][i]
+        key = f"{tenant}#{i}"
+
+        def observe(req: _Request) -> None:
+            lat.record(req.latency_us)
+            done.inc()
+            depth.set(float(server._q.qsize()))
+            self.drift.observe(key, "serve.latency_us", req.latency_us)
+
+        return observe
 
     # -- dispatch -------------------------------------------------------------
     def _pick(self, tenant: str) -> int:
@@ -152,9 +208,14 @@ class FleetServer:
         name = tenant or self._default
         if name not in self._servers:
             raise KeyError(f"unknown tenant {name!r}")
+        t0 = time.perf_counter()
         i = self._pick(name)
         self._dispatched[name][i] += 1
-        return self._servers[name][i].submit(x)
+        self._m_dispatched[name][i].inc()
+        req = self._servers[name][i].submit(x)
+        self._m_depth[name][i].set(float(self._servers[name][i]._q.qsize()))
+        self._m_overhead[name].record((time.perf_counter() - t0) * 1e6)
+        return req
 
     def infer(self, x: np.ndarray, tenant: Optional[str] = None,
               timeout: float = 30.0) -> np.ndarray:
@@ -168,30 +229,62 @@ class FleetServer:
                      tenant: Optional[str] = None) -> List[_Request]:
         """Scatter a batch across the tenant's replicas.
 
-        The batch is split into one contiguous slice per replica (balanced
-        sizes); slice ``i`` is enqueued on replica ``i`` back to back, so
-        each replica's collection window coalesces its whole slice into a
-        single kernel launch instead of one launch per round trip. Returns
-        the requests in submission order (use :meth:`gather`).
+        The batch is split into one contiguous slice per replica, sized by
+        the replica's current queue depth (:meth:`_slices`); slice ``i`` is
+        enqueued on replica ``i`` back to back, so each replica's collection
+        window coalesces its whole slice into a single kernel launch instead
+        of one launch per round trip. Returns the requests in submission
+        order (use :meth:`gather`).
         """
         name = tenant or self._default
         if name not in self._servers:
             raise KeyError(f"unknown tenant {name!r}")
-        servers = self._servers[name]
-        n = len(xs)
-        if n == 0:
+        if len(xs) == 0:
             return []
-        reqs: List[Optional[_Request]] = [None] * n
-        for i, idxs in enumerate(self._scatter(n, len(servers))):
+        reqs, _ = self._submit_batch(xs, name)
+        return reqs
+
+    def _slices(self, tenant: str, n: int) -> List[np.ndarray]:
+        """Adaptive scatter: contiguous slices sized ∝ 1 / (1 + queue depth).
+
+        A backlogged replica gets a proportionally smaller slice so every
+        replica drains at roughly the same time; on idle (equal-depth)
+        replicas the largest-remainder rounding reduces exactly to the
+        balanced ``np.array_split`` of the original static scatter (the
+        first ``n mod R`` replicas take the extra event). Deterministic:
+        remainder ties favour lower replica indices.
+        """
+        servers = self._servers[tenant]
+        weights = [1.0 / (1.0 + s._q.qsize()) for s in servers]
+        total = sum(weights)
+        shares = [n * w / total for w in weights]
+        counts = [int(s) for s in shares]
+        spare = n - sum(counts)
+        for i in sorted(range(len(servers)),
+                        key=lambda i: (-(shares[i] - counts[i]), i))[:spare]:
+            counts[i] += 1
+        out, start = [], 0
+        for c in counts:
+            out.append(np.arange(start, start + c))
+            start += c
+        return out
+
+    def _submit_batch(self, xs: Sequence[np.ndarray],
+                      name: str) -> Tuple[List[_Request], List[int]]:
+        """Scatter + enqueue; returns (requests in order, events per replica)."""
+        servers = self._servers[name]
+        t0 = time.perf_counter()
+        slices = self._slices(name, len(xs))
+        reqs: List[Optional[_Request]] = [None] * len(xs)
+        for i, idxs in enumerate(slices):
             for j in idxs:
                 reqs[j] = servers[i].submit(xs[j])
                 self._dispatched[name][i] += 1
-        return reqs
-
-    @staticmethod
-    def _scatter(n: int, n_replicas: int) -> List[np.ndarray]:
-        """Deterministic scatter: one balanced contiguous slice per replica."""
-        return np.array_split(np.arange(n), min(n_replicas, n))
+                self._m_dispatched[name][i].inc()
+            if len(idxs):
+                self._m_depth[name][i].set(float(servers[i]._q.qsize()))
+        self._m_overhead[name].record((time.perf_counter() - t0) * 1e6)
+        return reqs, [len(ix) for ix in slices]
 
     def gather(self, reqs: Sequence[_Request],
                timeout: float = 30.0) -> np.ndarray:
@@ -215,18 +308,34 @@ class FleetServer:
                                wall_us=0.0,
                                replica_counts=[0] * len(self._servers[name]))
         t0 = time.perf_counter()
-        reqs = self.submit_batch(xs, tenant=name)
+        reqs, counts = self._submit_batch(xs, name)
         results = self.gather(reqs, timeout=timeout)
-        wall_us = (time.perf_counter() - t0) * 1e6
+        t1 = time.perf_counter()
+        wall_us = (t1 - t0) * 1e6
         stats = ServeStats()
         for req in reqs:
             stats.record(req.t_submit, req.t_done)
-        # this batch's own scatter, recomputed from the deterministic split
-        # (the shared dispatch counters may be moved concurrently by other
-        # callers, so a before/after snapshot of them would race).
-        servers = self._servers[name]
-        counts = [len(ix) for ix in self._scatter(len(xs), len(servers))]
-        counts += [0] * (len(servers) - len(counts))
+        self._m_batch[name].record(float(len(xs)))
+        if wall_us > 0:
+            self._m_tput[name].set(len(xs) / (wall_us * 1e-6))
+        if self.tracer is not None:
+            self.tracer.span_us(
+                "fleet", f"{name}.dispatch", f"infer_batch[{len(xs)}]",
+                self.tracer.wall_us(t0), wall_us, cat="fleet",
+                args={"replica_counts": counts})
+            start = 0
+            for i, c in enumerate(counts):
+                sl = reqs[start:start + c]
+                start += c
+                if not sl:
+                    continue
+                ts = min(r.t_submit for r in sl)
+                te = max(r.t_done for r in sl)
+                self.tracer.span_us(
+                    "fleet", f"{name}#{i}", f"slice[{c}]",
+                    self.tracer.wall_us(ts),
+                    max((te - ts) * 1e6, 0.0), cat="slice",
+                    args={"events": c})
         return BatchResult(results=results, stats=stats, wall_us=wall_us,
                            replica_counts=counts)
 
@@ -274,6 +383,15 @@ class FleetServer:
             s = self.stats(name).summary()
             s["replicas"] = len(servers)
             s["dispatched"] = list(self._dispatched[name])
+            # Rolling percentiles from the streaming histogram (P² + buckets)
+            # — O(1) memory, unlike the exact ServeStats percentiles above
+            # which keep every latency.
+            h = self.registry.find("fleet.request.latency_us",
+                                   {"tenant": name})
+            if h is not None and h.count:
+                s["rolling_p50_us"] = h.quantile(0.50)
+                s["rolling_p90_us"] = h.quantile(0.90)
+                s["rolling_p99_us"] = h.quantile(0.99)
             per_tenant[name] = s
         fleet = self.stats().summary()
         fleet["replicas"] = self.num_replicas
@@ -304,10 +422,10 @@ class FleetServer:
         if not mix:
             return {}
         out: Dict[str, dict] = {}
-        sched = tenancy.pack_mix(mix)
+        sched = tenancy.pack_mix(mix, registry=self.registry)
         if sched is None:
             for name, spec, r in mix:
-                best = dse.explore(spec)
+                best = self._design(name)
                 lat_ns = best.latency.total_ns if best else float("nan")
                 ii_ns = (best.interval_ns or lat_ns) if best else float("nan")
                 out[name] = {"replicas": r, "latency_ns": lat_ns,
@@ -336,7 +454,8 @@ class FleetServer:
         out.update(per_tenant)
         if frontier:
             for name, spec, r in mix:
-                fr = tenancy.throughput_frontier(spec, contention=contention)
+                fr = tenancy.throughput_frontier(spec, contention=contention,
+                                                 registry=self.registry)
                 at_or_below = [pt for pt in fr if pt.replicas <= r]
                 pick = (max(at_or_below, key=lambda pt: pt.replicas)
                         if at_or_below else (fr[0] if fr else None))
@@ -344,3 +463,80 @@ class FleetServer:
                     out[name]["frontier_point"] = pick.as_dict()
         out["_fleet"] = sched.summary()
         return out
+
+    # -- drift monitoring ------------------------------------------------------
+    def _design(self, name: str) -> Optional[dse.DSEResult]:
+        """Latency-optimal §5.2 design for a tenant, cached per fleet."""
+        if name not in self._design_cache:
+            spec = self.tenants[name].model_spec
+            self._design_cache[name] = (
+                dse.explore(spec, registry=self.registry)
+                if spec is not None else None)
+        return self._design_cache[name]
+
+    def drift_snapshot(self, *, tier_s: bool = True) -> DriftMonitor:
+        """Refresh the drift monitor's modeled references and return it.
+
+        Two families (see the :mod:`repro.obs` docstring):
+
+          * ``serve.latency_us`` / ``serve.interval_us`` per replica key
+            ``tenant#i`` — measured wall-clock serving against the Tier-A
+            modeled VEK280 numbers. Interpret-mode CPU serving sits orders
+            of magnitude above the modeled hardware, so these ratios track
+            *relative* drift across replicas and over time, never absolute
+            accuracy.
+          * ``model.latency_ns`` / ``model.interval_ns`` per tenant — Tier-A
+            analytic prediction vs the Tier-S discrete-event simulator for
+            the same design. Both sides are modeled, agreement is expected
+            within a few percent, and this is the path a CI drift gate can
+            hold to a MAPE threshold.
+
+        ``serve.latency_us`` measurements stream in continuously via the
+        per-replica completion hooks; this call fills in the modeled side
+        (and, with ``tier_s``, runs the simulator once per tenant).
+        """
+        mon = self.drift
+        for name, t in self.tenants.items():
+            best = self._design(name)
+            if best is None:
+                continue
+            lat_us = best.latency.total_ns / 1000.0
+            ii_ns = best.interval_ns or best.latency.total_ns
+            for i, s in enumerate(self._servers[name]):
+                key = f"{name}#{i}"
+                mon.expect(key, "serve.latency_us", lat_us)
+                st = s.stats
+                if (st.t_first_submit is not None
+                        and len(st.latencies_us) >= 2):
+                    span_s = st.t_last_done - st.t_first_submit
+                    mon.expect(key, "serve.interval_us", ii_ns / 1000.0)
+                    mon.observe(key, "serve.interval_us",
+                                span_s * 1e6 / len(st.latencies_us))
+            if tier_s:
+                from repro.sim.run import SimConfig, simulate_placement
+                mon.expect(name, "model.latency_ns", best.latency.total_ns)
+                one = simulate_placement(
+                    best.placement, tenant=name,
+                    config=SimConfig(events=1, trace=False))
+                mon.observe(name, "model.latency_ns",
+                            aie_arch.ns(one.latency_cycles))
+                mon.expect(name, "model.interval_ns", ii_ns)
+                piped = simulate_placement(
+                    best.placement, tenant=name,
+                    config=SimConfig(events=10, pipeline_depth=4,
+                                     trace=False))
+                mon.observe(name, "model.interval_ns", aie_arch.ns(
+                    piped.instances[0].steady_interval_cycles()))
+        return mon
+
+    def telemetry_snapshot(self, *, drift: bool = True,
+                           tier_s: bool = True) -> dict:
+        """One JSON-ready bundle: metrics snapshot + serving summary + drift."""
+        snap: Dict[str, object] = {}
+        if drift:
+            # Before the metrics snapshot: the drift pass may run the DSE and
+            # simulator, whose own counters belong in the same snapshot.
+            snap["drift"] = self.drift_snapshot(tier_s=tier_s).summary()
+        snap["metrics"] = self.registry.snapshot()
+        snap["serve"] = self.summary()
+        return snap

@@ -90,6 +90,7 @@ class Resource:
         self.spans: List[Tuple[str, float, float, int]] = []
         self.waits: int = 0
         self.wait_cycles: float = 0.0
+        self.max_queued: int = 0
         self._busy: int = 0
         self._queue: Deque["Task"] = deque()
 
@@ -100,6 +101,7 @@ class Resource:
         else:
             self.waits += 1
             self._queue.append(task)
+            self.max_queued = max(self.max_queued, len(self._queue))
 
     def release(self) -> None:
         self._busy -= 1
@@ -130,14 +132,14 @@ class Task:
     """One activity of the DAG. Build via :meth:`TaskGraph.task`."""
 
     __slots__ = ("graph", "name", "duration", "resource", "delay", "bytes",
-                 "pid", "tid", "args", "start", "end", "requested_at",
+                 "pid", "tid", "cat", "args", "start", "end", "requested_at",
                  "_npreds", "_succs", "record")
 
     def __init__(self, graph: "TaskGraph", name: str, *, duration: float = 0.0,
                  resource: Optional[Resource] = None, delay: float = 0.0,
                  bytes: int = 0, pid: Optional[str] = None,
-                 tid: Optional[str] = None, record: bool = True,
-                 args: Optional[dict] = None) -> None:
+                 tid: Optional[str] = None, cat: Optional[str] = None,
+                 record: bool = True, args: Optional[dict] = None) -> None:
         if duration < 0:
             raise ValueError(f"{name}: negative duration {duration}")
         self.graph = graph
@@ -148,6 +150,7 @@ class Task:
         self.bytes = bytes
         self.pid = pid if pid is not None else (resource.pid if resource else "")
         self.tid = tid if tid is not None else (resource.tid if resource else "")
+        self.cat = cat
         self.args = args or {}
         self.record = record
         self.start: Optional[float] = None
@@ -195,7 +198,7 @@ class Task:
             self.resource.release()
         if self.record and self.graph.trace is not None and self.duration > 0:
             self.graph.trace.span(self.pid, self.tid, self.name, self.start,
-                                  self.end - self.start,
+                                  self.end - self.start, cat=self.cat,
                                   args={**self.args, "bytes": self.bytes}
                                   if self.bytes else dict(self.args))
         for s in self._succs:

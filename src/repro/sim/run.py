@@ -202,6 +202,54 @@ class SimResult:
                 best_name, best_util = r.name, u
         return best_name, best_util
 
+    def export_metrics(self, registry=None):
+        """Emit the run's telemetry into a :class:`repro.obs.MetricsRegistry`.
+
+        Gauges ``sim.resource.utilization{resource, kind}`` (busy fraction
+        over the makespan, bottleneck attribution: the max names the
+        II-setting stage), ``sim.resource.wait_cycles`` /
+        ``sim.resource.max_queue`` (cross-tenant queueing on shared shim
+        columns), per-instance latency histograms
+        ``sim.event.latency_ns{instance}`` and steady-interval gauges, plus
+        engine counters. Returns the registry (a fresh one when None).
+        """
+        from repro.obs import MetricsRegistry
+        reg = registry if registry is not None else MetricsRegistry()
+        end = self.makespan_cycles
+        groups = (("tile", self.arr.tile_resources()),
+                  ("shim", self.arr.shim_resources()),
+                  ("edge", self.arr.edge_resources()))
+        for kind, res in groups:
+            for r in res.values():
+                reg.gauge("sim.resource.utilization",
+                          {"resource": r.name, "kind": kind}
+                          ).set(r.utilization(0.0, end))
+                if r.wait_cycles > 0:
+                    reg.gauge("sim.resource.wait_cycles",
+                              {"resource": r.name}).set(r.wait_cycles)
+                if r.max_queued > 0:
+                    reg.gauge("sim.resource.max_queue",
+                              {"resource": r.name}).set(r.max_queued)
+        bname, butil = self.bottleneck()
+        if bname:
+            reg.gauge("sim.bottleneck.utilization",
+                      {"resource": bname}).set(butil)
+        for inst in self.instances:
+            h = reg.histogram("sim.event.latency_ns",
+                              {"instance": inst.label})
+            for lat in inst.latencies:
+                h.record(aie_arch.ns(lat))
+            reg.gauge("sim.instance.steady_interval_ns",
+                      {"instance": inst.label}
+                      ).set(aie_arch.ns(inst.steady_interval_cycles()))
+            reg.counter("sim.events.completed",
+                        {"instance": inst.label}).inc(len(inst.latencies))
+        reg.gauge("sim.engine.events_run").set(self.graph.sim.events_run)
+        reg.gauge("sim.makespan_ns").set(aie_arch.ns(end))
+        reg.gauge("sim.throughput.steady_eps").set(self.steady_throughput_eps())
+        reg.gauge("sim.shim.wait_cycles_total").set(self.shim_wait_cycles())
+        return reg
+
 
 def _split(nbytes: int, n: int) -> List[int]:
     """Split ``nbytes`` into ``n`` integer shares that sum exactly."""
@@ -248,8 +296,8 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
         cur = root
         if cfg.include_plio:
             ingest = [g.task(f"{ev}.load", resource=arr.shim(c, label),
-                             duration=t_in, bytes=b, args={"ev": ev}
-                             ).after(root)
+                             duration=t_in, bytes=b, cat="ingest",
+                             args={"ev": ev}).after(root)
                       for c, b in zip(cols, _split(in_bytes, len(cols)))]
             rec["ingest"] = ingest
             cur = g.task(f"{ev}.loaded", record=False).after(*ingest)
@@ -261,7 +309,8 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
             lname = m.layer.name or f"L{i}"
             spans = [g.task(f"{ev}.{lname}",
                             resource=arr.tile(rect.r0 + lr, rect.c0 + lc),
-                            delay=s, duration=d, args={"ev": ev}).after(cur)
+                            delay=s, duration=d, cat="compute",
+                            args={"ev": ev}).after(cur)
                      for lr, lc, s, d in occ.spans]
             rec["layers"].append(spans)
             ldone = g.task(f"{ev}.{lname}.done", record=False).after(*spans)
@@ -273,14 +322,14 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
             ec = ecs[i]
             edge = g.task(f"{ev}.{lname}>{ec.kind}",
                           resource=arr.edge(f"{label}.L{i}>L{i + 1}", ec.kind),
-                          duration=ec.cycles, bytes=ec.data_bytes,
+                          duration=ec.cycles, bytes=ec.data_bytes, cat="edge",
                           args={"ev": ev}).after(ldone)
             rec["edges"].append((ec.kind, edge, ec.data_bytes))
             cur = edge
         if cfg.include_plio:
             egress = [g.task(f"{ev}.store", resource=arr.shim(c, label),
-                             duration=t_out, bytes=b, args={"ev": ev}
-                             ).after(cur)
+                             duration=t_out, bytes=b, cat="egress",
+                             args={"ev": ev}).after(cur)
                       for c, b in zip(cols, _split(out_bytes, len(cols)))]
             rec["egress"] = egress
             cur = g.task(f"{ev}.done", record=False).after(*egress)
@@ -307,11 +356,19 @@ def _finalize(g: TaskGraph, arr: ArrayResources, insts: List[InstanceSim],
 
 def simulate_placement(placement: Placement, *, tenant: str = "model",
                        p: OverheadParams = OVERHEADS,
-                       config: Optional[SimConfig] = None) -> SimResult:
-    """Simulate one standalone instance end to end (Tier-S single tenant)."""
+                       config: Optional[SimConfig] = None,
+                       tracer: Optional[ChromeTrace] = None) -> SimResult:
+    """Simulate one standalone instance end to end (Tier-S single tenant).
+
+    ``tracer`` lets the caller supply an existing :class:`ChromeTrace`
+    (e.g. one already carrying fleet serving spans) so simulator spans land
+    in the same unified timeline; otherwise one is created per run when
+    ``config.trace`` is set.
+    """
     cfg = config or SimConfig()
-    trace = ChromeTrace(meta={"mode": "single", "seed": cfg.seed,
-                              "tenant": tenant}) if cfg.trace else None
+    trace = tracer if tracer is not None else (
+        ChromeTrace(meta={"mode": "single", "seed": cfg.seed,
+                          "tenant": tenant}) if cfg.trace else None)
     g = TaskGraph(trace=trace)
     arr = ArrayResources(shim_shared=cfg.shim_contention)
     rng = random.Random(cfg.seed)
@@ -321,18 +378,22 @@ def simulate_placement(placement: Placement, *, tenant: str = "model",
 
 
 def simulate_schedule(schedule, *, p: OverheadParams = OVERHEADS,
-                      config: Optional[SimConfig] = None) -> SimResult:
+                      config: Optional[SimConfig] = None,
+                      tracer: Optional[ChromeTrace] = None) -> SimResult:
     """Simulate a multi-tenant :class:`repro.core.tenancy.ArraySchedule`.
 
     All instances ingest concurrently through the *shared* shim columns
     under their boxes; with ``config.shim_contention`` (default) transfers
     sharing a column serialize, which is the contention-aware replacement
     for the congestion-free ``R / latency`` throughput model.
+    ``tracer`` injects an existing :class:`ChromeTrace` for a unified
+    timeline (see :func:`simulate_placement`).
     """
     cfg = config or SimConfig()
-    trace = (ChromeTrace(meta={"mode": "schedule", "seed": cfg.seed,
-                               "instances": len(schedule.instances)})
-             if cfg.trace else None)
+    trace = tracer if tracer is not None else (
+        ChromeTrace(meta={"mode": "schedule", "seed": cfg.seed,
+                          "instances": len(schedule.instances)})
+        if cfg.trace else None)
     g = TaskGraph(trace=trace)
     arr = ArrayResources(rows=schedule.rows, cols=schedule.cols,
                          shim_shared=cfg.shim_contention)

@@ -1,88 +1,43 @@
-"""Chrome-trace (``chrome://tracing`` / Perfetto) export of simulation runs.
+"""Chrome-trace export of simulation runs, on the unified obs Tracer.
 
-Lanes: one trace *process* per resource class — tiles, cascade/shared-memory
-FIFOs, DMA routes, shim columns, and one "events" process with a row per
-tenant instance showing whole-event spans. Timestamps are emitted in
-microseconds (the Chrome trace unit) converted from AIE cycles at 1.25 GHz,
-so a ~600 ns inference renders as a ~0.6 us span.
+:class:`ChromeTrace` is :class:`repro.obs.tracing.Tracer` with a *cycle*
+clock: span/instant timestamps are AIE cycles, converted to microseconds
+(the Chrome trace unit) at 1.25 GHz, so a ~600 ns inference renders as a
+~0.6 us span. Lanes follow the shared pid conventions
+(:data:`repro.obs.tracing.DEFAULT_PIDS`): one trace *process* per resource
+class — tiles, cascade/shared-memory FIFOs, DMA routes, shim columns — and
+one "events" process with a row per tenant instance showing whole-event
+spans. Because the base class also records wall-clock spans
+(:meth:`~repro.obs.tracing.Tracer.region`), one ChromeTrace can carry
+simulator task spans and fleet serving spans in a single timeline.
 """
 from __future__ import annotations
 
-import json
-from typing import Dict, List, Optional
+from typing import Optional
 
 from repro.core import aie_arch
+from repro.obs.tracing import DEFAULT_PIDS, Tracer, load
 
-#: Stable pid numbering so lanes group predictably in the viewer.
-PIDS = {"events": 1, "tiles": 2, "fifo": 3, "dma": 4, "shim": 5}
+#: Backward-compatible alias: the default pid numbering of the unified
+#: tracer ("events": 1, "tiles": 2, "fifo": 3, "dma": 4, "shim": 5, ...).
+PIDS = DEFAULT_PIDS
+
+__all__ = ["ChromeTrace", "PIDS", "load"]
 
 
 def _us(cycles: float) -> float:
     return cycles * aie_arch.NS_PER_CYCLE / 1000.0
 
 
-class ChromeTrace:
-    """Accumulates complete ("ph": "X") spans plus naming metadata."""
-
-    def __init__(self, *, meta: Optional[dict] = None) -> None:
-        self.events: List[dict] = []
-        self.meta = dict(meta or {})
-        self._tids: Dict[str, Dict[str, int]] = {}
-
-    def _ids(self, pid_name: str, tid_name: str) -> tuple:
-        pid = PIDS.get(pid_name)
-        if pid is None:
-            pid = PIDS[pid_name] = max(PIDS.values()) + 1
-        tids = self._tids.setdefault(pid_name, {})
-        tid = tids.get(tid_name)
-        if tid is None:
-            tid = tids[tid_name] = len(tids) + 1
-            self.events.append({"ph": "M", "name": "thread_name", "pid": pid,
-                                "tid": tid, "args": {"name": tid_name}})
-            if len(tids) == 1:
-                self.events.append({"ph": "M", "name": "process_name",
-                                    "pid": pid, "tid": 0,
-                                    "args": {"name": pid_name}})
-        return pid, tid
+class ChromeTrace(Tracer):
+    """Unified tracer whose span/instant timestamps are AIE cycles."""
 
     def span(self, pid_name: str, tid_name: str, name: str, start_cycles: float,
-             dur_cycles: float, *, args: Optional[dict] = None) -> None:
-        pid, tid = self._ids(pid_name, tid_name)
-        ev = {"ph": "X", "name": name, "pid": pid, "tid": tid,
-              "ts": _us(start_cycles), "dur": _us(dur_cycles)}
-        if args:
-            ev["args"] = args
-        self.events.append(ev)
+             dur_cycles: float, *, cat: Optional[str] = None,
+             args: Optional[dict] = None) -> None:
+        self.span_us(pid_name, tid_name, name, _us(start_cycles),
+                     _us(dur_cycles), cat=cat, args=args)
 
     def instant(self, pid_name: str, tid_name: str, name: str,
                 t_cycles: float) -> None:
-        pid, tid = self._ids(pid_name, tid_name)
-        self.events.append({"ph": "i", "name": name, "pid": pid, "tid": tid,
-                            "ts": _us(t_cycles), "s": "t"})
-
-    def to_dict(self) -> dict:
-        return {"traceEvents": self.events, "displayTimeUnit": "ns",
-                "otherData": self.meta}
-
-    def save(self, path: str) -> str:
-        with open(path, "w") as f:
-            json.dump(self.to_dict(), f)
-        return path
-
-    def spans(self, pid_name: Optional[str] = None) -> List[dict]:
-        """Complete spans, optionally filtered to one process lane."""
-        want = PIDS.get(pid_name) if pid_name else None
-        return [e for e in self.events if e["ph"] == "X"
-                and (want is None or e["pid"] == want)]
-
-
-def load(path: str) -> dict:
-    """Load + structurally validate a Chrome trace written by :class:`ChromeTrace`."""
-    with open(path) as f:
-        data = json.load(f)
-    if "traceEvents" not in data or not isinstance(data["traceEvents"], list):
-        raise ValueError(f"{path}: not a Chrome trace (no traceEvents list)")
-    for ev in data["traceEvents"]:
-        if ev["ph"] == "X" and (ev["dur"] < 0 or ev["ts"] < 0):
-            raise ValueError(f"{path}: negative span {ev}")
-    return data
+        self.instant_us(pid_name, tid_name, name, _us(t_cycles))

@@ -202,3 +202,99 @@ class TestFleetServer:
         with pytest.raises(ValueError):
             FleetServer([TenantSpec(name="m", qmlp=q),
                          TenantSpec(name="m", qmlp=q)])
+
+
+class TestFleetTelemetry:
+    def test_dispatch_metrics_recorded(self, qmlp):
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=2)])
+        try:
+            xs = _events(jc, 8, q.e_in)
+            fleet.infer_batch(xs)
+            for i in range(4):
+                fleet.infer(xs[i])
+            reg = fleet.registry
+            disp = reg.all("fleet.replica.dispatched")
+            assert sum(c.value for c in disp) == 12
+            depths = reg.all("fleet.replica.queue_depth")
+            assert len(depths) == 2
+            lat = reg.find("fleet.request.latency_us", {"tenant": "m"})
+            assert lat is not None and lat.count == 12
+            assert lat.quantile(0.5) > 0
+            assert reg.find("fleet.batch.size", {"tenant": "m"}).count == 1
+            oh = reg.find("fleet.dispatch.overhead_us", {"tenant": "m"})
+            assert oh is not None and oh.count == 5   # 1 batch + 4 singles
+            s = fleet.summary()["tenants"]["m"]
+            assert s["rolling_p50_us"] > 0
+            assert s["rolling_p99_us"] >= s["rolling_p50_us"]
+        finally:
+            fleet.close()
+
+    def test_adaptive_scatter_skews_away_from_backlog(self, qmlp):
+        """A replica with a queue backlog gets a proportionally smaller
+        slice; equal queues reduce to the balanced split."""
+        q, _ = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=2)])
+        try:
+            servers = fleet._servers["m"]
+            # Freeze the workers so the staged backlog is stable.
+            for s in servers:
+                s._stop.set()
+            for s in servers:
+                s._thread.join(timeout=5)
+            assert [len(ix) for ix in fleet._slices("m", 10)] == [5, 5]
+            for _ in range(4):
+                servers[0]._q.put(object())
+            # weights 1/5 vs 1 -> shares [1.67, 8.33] -> [2, 8]
+            assert [len(ix) for ix in fleet._slices("m", 10)] == [2, 8]
+            # slices stay contiguous and cover the batch in order
+            np.testing.assert_array_equal(
+                np.concatenate(fleet._slices("m", 10)), np.arange(10))
+        finally:
+            fleet.close()
+
+    def test_batch_spans_in_tracer(self, qmlp):
+        from repro.obs import Tracer
+        q, jc = qmlp
+        tr = Tracer()
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=2)], tracer=tr)
+        try:
+            fleet.infer_batch(_events(jc, 6, q.e_in))
+        finally:
+            fleet.close()
+        spans = tr.spans("fleet")
+        names = {e["name"] for e in spans}
+        assert "infer_batch[6]" in names
+        assert any(n.startswith("slice[") for n in names)
+        assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in spans)
+
+    def test_drift_snapshot_and_telemetry(self, qmlp):
+        import json as _json
+
+        from repro.core import layerspec
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=2,
+                                        model_spec=layerspec.jsc_m())])
+        try:
+            xs = _events(jc, 8, q.e_in)
+            fleet.infer_batch(xs)
+            snap = fleet.telemetry_snapshot(tier_s=True)
+        finally:
+            fleet.close()
+        drift = snap["drift"]
+        # serving path: per-replica ratios populated, hugely inflated vs
+        # the modeled VEK280 (CPU interpret mode) — informational only
+        entries = drift["serve.latency_us"]["entries"]
+        assert set(entries) == {"m#0", "m#1"}
+        assert all(e["ratio"] is not None and e["ratio"] > 1.0
+                   for e in entries.values())
+        # model path: Tier-A analytic vs Tier-S simulated, tight agreement
+        model = drift["model.latency_ns"]["entries"]["m"]
+        assert model["ratio"] == pytest.approx(1.0, abs=0.05)
+        assert drift["model.latency_ns"]["mape"] < 0.05
+        _json.dumps(snap)   # whole bundle must be JSON-serializable
+        assert fleet.drift.flagged(10.0, "serve.latency_us")
