@@ -1,0 +1,204 @@
+"""DSE throughput: vectorized Tier-A scoring vs scalar, exact vs top-K.
+
+Three sections:
+
+  1. **Parity** — the batched twins must reproduce the scalar model bit
+     for bit: every Table 2 single-AIE shape (with and without bias+ReLU)
+     and every DSE frontier design of the Table 3 workloads (end-to-end
+     latency and initiation interval). Acceptance: max relative error
+     <= 1e-6 (in practice exactly 0.0 — the twins replicate the scalar
+     operation order).
+  2. **Throughput** — candidate designs scored per second, batched
+     (``perfmodel_batched.score_batch``) vs the scalar
+     ``end_to_end_cycles`` + ``initiation_interval_cycles`` loop.
+     Acceptance: >= 1e5 designs/sec batched and >= 100x over scalar —
+     the margin that makes exhaustive enumeration affordable.
+  3. **Exhaustive vs top-K** — ``dse.search(exhaustive=True)`` against the
+     top-K DP on every Table 3 model: reports frontier sizes, newly
+     discovered exact points, and enumeration runtime. Acceptance: every
+     top-K frontier point is dominated-or-matched by the exact frontier
+     (the exact frontier is never worse anywhere).
+
+Artifact: ``benchmarks/out/dse_throughput.json``. ``--smoke`` trims to the
+sub-second models (CI-sized); standalone runs exit 1 on any gate failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import dse, perfmodel
+from repro.core import perfmodel_batched as pmb
+from repro.core.layerspec import REALISTIC_WORKLOADS
+
+SMOKE_MODELS = ("JSC-M", "Deepsets-32", "Deepsets-32-d", "Deepsets-64")
+
+#: Scalar designs scored when timing the reference loop (extrapolated).
+_SCALAR_SAMPLE = 200
+#: Minimum batch size for a stable batched-throughput measurement.
+_BATCH_TARGET = 50_000
+
+
+def _parity_table2() -> float:
+    """Max relative batched-vs-scalar error over the Table 2 shapes."""
+    worst = 0.0
+    shapes = list(perfmodel.TABLE2_NS)
+    arr = np.array(shapes, dtype=np.int64)
+    for br in (False, True):
+        v = pmb.single_aie_cycles_v(arr[:, 0], arr[:, 1], arr[:, 2],
+                                    bias_relu=br)
+        for (m, k, n), got in zip(shapes, v):
+            want = perfmodel.single_aie_cycles(m, k, n, bias_relu=br)
+            worst = max(worst, abs(got - want) / max(abs(want), 1e-12))
+    return worst
+
+
+def _parity_designs(frontiers: dict) -> float:
+    """Max relative error on real DSE frontier designs (latency and II)."""
+    worst = 0.0
+    for name, designs in frontiers.items():
+        batch = pmb.DesignBatch.from_placements(
+            [d.placement for d in designs])
+        lat_v = pmb.end_to_end_cycles_v(batch).total
+        ii_v = pmb.initiation_interval_cycles_v(batch)
+        for d, lv, iv in zip(designs, lat_v, ii_v):
+            lat_s = d.latency.total
+            ii_s = perfmodel.initiation_interval_cycles(d.placement)
+            worst = max(worst, abs(lv - lat_s) / max(abs(lat_s), 1e-12),
+                        abs(iv - ii_s) / max(abs(ii_s), 1e-12))
+    return worst
+
+
+def _throughput(frontiers: dict) -> dict:
+    """designs/sec, batched vs scalar, on replicated frontier designs."""
+    placements = [d.placement for designs in frontiers.values()
+                  for d in designs]
+    # Time the scalar reference on a sample, extrapolate the rate.
+    sample = (placements * (-(-_SCALAR_SAMPLE // len(placements)))
+              )[:_SCALAR_SAMPLE]
+    t0 = time.perf_counter()
+    for pl in sample:
+        perfmodel.end_to_end_cycles(pl)
+        perfmodel.initiation_interval_cycles(pl)
+    scalar_dt = time.perf_counter() - t0
+    scalar_rate = len(sample) / scalar_dt
+
+    # Batched: same designs replicated into one big struct-of-arrays batch
+    # per model (batches cannot mix models), scored in one pass each.
+    reps = -(-_BATCH_TARGET // sum(len(d) for d in frontiers.values()))
+    batches = [pmb.DesignBatch.from_placements(
+        [d.placement for d in designs] * reps)
+        for designs in frontiers.values()]
+    n = sum(b.n for b in batches)
+    t0 = time.perf_counter()
+    for b in batches:
+        pmb.score_batch(b)
+    batched_dt = time.perf_counter() - t0
+    batched_rate = n / batched_dt
+    return {"scalar_designs_per_sec": scalar_rate,
+            "batched_designs_per_sec": batched_rate,
+            "batched_n": n,
+            "speedup": batched_rate / scalar_rate}
+
+
+def _exhaustive(models: dict, frontiers: dict) -> dict:
+    """Exact-vs-top-K frontier comparison per model."""
+    out = {}
+    for name, spec in models.items():
+        topk = frontiers[name]
+        t0 = time.perf_counter()
+        exact = dse.search(spec, exhaustive=True)
+        dt = time.perf_counter() - t0
+        ex_pts = [(d.mapping.total_tiles, d.latency.total,
+                   perfmodel.initiation_interval_cycles(d.placement))
+                  for d in exact]
+        sigs = {tuple((m.A, m.B, m.C) for m in d.mapping.mappings)
+                for d in topk}
+        new = sum(1 for d in exact
+                  if tuple((m.A, m.B, m.C) for m in d.mapping.mappings)
+                  not in sigs)
+        # Superset-or-equal: every top-K point dominated-or-matched by an
+        # exact point (<= on all three objectives).
+        eps = 1e-9
+        covered = all(
+            any(et <= t and el <= lat + eps and ei <= ii + eps
+                for et, el, ei in ex_pts)
+            for t, lat, ii in (
+                (d.mapping.total_tiles, d.latency.total,
+                 perfmodel.initiation_interval_cycles(d.placement))
+                for d in topk))
+        out[name] = {"topk_points": len(topk), "exact_points": len(exact),
+                     "new_points": new, "covers_topk": covered,
+                     "seconds": dt}
+        print(f"  {name:14s} top-K {len(topk):3d} -> exact {len(exact):3d} "
+              f"points ({new} new), covers top-K: {covered}, {dt:.2f}s")
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    names = (SMOKE_MODELS if smoke else tuple(REALISTIC_WORKLOADS))
+    models = {n: REALISTIC_WORKLOADS[n]() for n in names}
+    frontiers = {n: dse.search(spec) for n, spec in models.items()}
+
+    failures = []
+    print("== parity (batched twins vs scalar model)")
+    err_t2 = _parity_table2()
+    err_dse = _parity_designs(frontiers)
+    n_designs = sum(len(d) for d in frontiers.values())
+    print(f"  Table 2 shapes: max rel err {err_t2:.2e}; "
+          f"{n_designs} frontier designs: max rel err {err_dse:.2e}")
+    if max(err_t2, err_dse) > 1e-6:
+        failures.append(f"parity: max rel err {max(err_t2, err_dse):.2e} "
+                        "> 1e-6")
+
+    print("== throughput (designs scored per second)")
+    thr = _throughput(frontiers)
+    print(f"  scalar {thr['scalar_designs_per_sec']:,.0f}/s vs batched "
+          f"{thr['batched_designs_per_sec']:,.0f}/s "
+          f"({thr['batched_n']} designs) = {thr['speedup']:.0f}x")
+    if thr["batched_designs_per_sec"] < 1e5:
+        failures.append(f"throughput: {thr['batched_designs_per_sec']:,.0f} "
+                        "designs/s < 1e5")
+    if thr["speedup"] < 100:
+        failures.append(f"throughput: speedup {thr['speedup']:.0f}x < 100x")
+
+    print("== exhaustive vs top-K frontier")
+    ex = _exhaustive(models, frontiers)
+    for name, rec in ex.items():
+        if not rec["covers_topk"]:
+            failures.append(f"exhaustive: {name} frontier does not cover "
+                            "the top-K frontier")
+
+    for f in failures:
+        print(f"GATE FAILED: {f}")
+    res = {
+        "parity_max_rel_err": max(err_t2, err_dse),
+        "batched_designs_per_sec": thr["batched_designs_per_sec"],
+        "speedup_x": thr["speedup"],
+        "exact_new_points": sum(r["new_points"] for r in ex.values()),
+        "models_covered": sum(r["covers_topk"] for r in ex.values()),
+        "gate_failures": len(failures),
+    }
+    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "dse_throughput.json")
+    with open(path, "w") as f:
+        json.dump({"smoke": smoke, "summary": res, "throughput": thr,
+                   "exhaustive": ex, "failures": failures},
+                  f, indent=2, sort_keys=True)
+    print(f"artifact -> {path}")
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset (sub-second models only)")
+    args = ap.parse_args()
+    if main(smoke=args.smoke)["gate_failures"]:
+        sys.exit(1)

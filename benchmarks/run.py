@@ -7,10 +7,10 @@ from __future__ import annotations
 import sys
 import time
 
-from . import (dse_quality, fig9_perfmodel_error, fig10_synthetic_mlp,
-               fig11_realistic, roofline_report, sim_vs_model,
-               table2_single_aie, table4_global_agg, throughput_pareto,
-               tpu_cascade_fusion)
+from . import (dse_quality, dse_throughput, fig9_perfmodel_error,
+               fig10_synthetic_mlp, fig11_realistic, roofline_report,
+               sim_vs_model, table2_single_aie, table4_global_agg,
+               throughput_pareto, tpu_cascade_fusion)
 
 BENCHES = {
     "table2_single_aie": table2_single_aie.main,
@@ -20,6 +20,7 @@ BENCHES = {
     "table4_global_agg": table4_global_agg.main,
     "tpu_cascade_fusion": tpu_cascade_fusion.main,
     "dse_quality": dse_quality.main,
+    "dse_throughput": dse_throughput.main,
     "roofline_report": roofline_report.main,
     "throughput_pareto": throughput_pareto.main,
     "pipelined_throughput": throughput_pareto.pipelined_headline,

@@ -30,7 +30,10 @@ import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from . import aie_arch
+from . import perfmodel_batched as pmb
 from .aie_arch import OverheadParams, OVERHEADS
 from .layerspec import ModelSpec
 from .mapping import Mapping, ModelMapping, cascade_compatible, enumerate_mappings
@@ -99,12 +102,82 @@ def _edge_cost_estimate(prev: Mapping, nxt: Mapping, *, force_dma: bool,
                            n_streams=n_streams, p=p), False
 
 
+#: Below this many items the scalar Pareto paths win (no array setup cost)
+#: and stay as the behavioral reference the vectorized kernels must match.
+_PARETO_VECTOR_MIN = 64
+
+
+def _key_matrix(items: Sequence, key: Callable) -> Optional[np.ndarray]:
+    """Key tuples as a float [n, d] matrix, or None when any key is
+    non-numeric / ragged (the scalar path handles those)."""
+    try:
+        mat = np.array([tuple(key(it)) for it in items], dtype=np.float64)
+    except (TypeError, ValueError):
+        return None
+    if mat.ndim != 2 or np.isnan(mat).any():
+        return None
+    return mat
+
+
+def _lexsort_rows(mat: np.ndarray) -> np.ndarray:
+    """Stable lexicographic row order (first column primary), matching
+    ``sorted(items, key=key)`` on the same tuples."""
+    return np.lexsort(tuple(mat[:, d] for d in range(mat.shape[1] - 1, -1, -1)))
+
+
+def _pareto_mask_sorted(mat: np.ndarray, chunk: int = 2048) -> np.ndarray:
+    """Keep-mask of the Pareto frontier (every column minimized) over rows
+    already in lexicographic order.
+
+    A sorted row is dominated iff *some earlier row* is ``<=`` in every
+    coordinate (any dominator sorts first; exact duplicates drop against
+    their first copy). By transitivity it suffices to test (a) earlier
+    *kept* rows and (b) earlier rows of the same block — so each block is
+    one ``[blk, kept, d]`` broadcast plus one upper-triangular in-block
+    matrix, never an O(n^2) pass over everything."""
+    n, d = mat.shape
+    keep = np.zeros(n, dtype=bool)
+    kept_rows: List[np.ndarray] = []
+    for start in range(0, n, chunk):
+        blk = mat[start:start + chunk]
+        dom = np.zeros(len(blk), dtype=bool)
+        for kr in kept_rows:
+            todo = ~dom
+            if not todo.any():
+                break
+            dom[todo] |= ((kr[:, None, :] <= blk[todo][None, :, :])
+                          .all(-1).any(0))
+        inb = (blk[:, None, :] <= blk[None, :, :]).all(-1)
+        dom |= np.triu(inb, 1).any(axis=0)
+        keep[start:start + chunk] = ~dom
+        survivors = blk[~dom]
+        if len(survivors):
+            kept_rows.append(survivors)
+    return keep
+
+
 def pareto_front(items: Sequence, key: Callable) -> List:
     """Generic 2-D Pareto filter: ``key(item) -> (primary, secondary)``,
     both minimized. Returns items sorted by ascending primary, keeping one
     per primary value — the one whose secondary strictly beats every kept
     predecessor. Shared by :func:`search` and
-    :func:`repro.core.tenancy.throughput_frontier`."""
+    :func:`repro.core.tenancy.throughput_frontier`.
+
+    Large numeric inputs take a vectorized path (sort + exclusive running
+    minimum of the secondary); small or non-numeric inputs keep the scalar
+    loop. The two agree exactly (property-tested)."""
+    items = list(items)
+    if len(items) >= _PARETO_VECTOR_MIN:
+        mat = _key_matrix(items, key)
+        if mat is not None and mat.shape[1] == 2:
+            order = _lexsort_rows(mat)
+            sec = mat[order, 1]
+            # kept[i] <=> sec[i] beats every kept predecessor <=> sec[i]
+            # beats the exclusive running min over *all* predecessors
+            # (any non-kept predecessor has a kept row at or below it).
+            prev_min = np.concatenate(
+                ([np.inf], np.minimum.accumulate(sec)[:-1]))
+            return [items[i] for i in order[sec < prev_min]]
     front: List = []
     for it in sorted(items, key=key):
         if all(key(it)[1] < key(kept)[1] for kept in front):
@@ -118,7 +191,19 @@ def pareto_front_nd(items: Sequence, key: Callable) -> List:
     ``<=`` in every coordinate and a different key tuple; exact-duplicate
     keys keep the first), sorted by ascending key. Used by :func:`search`
     for the {tiles, latency, initiation interval} frontier — a design with
-    worse latency but a deeper pipeline (smaller II) now survives."""
+    worse latency but a deeper pipeline (smaller II) now survives.
+
+    Large numeric inputs go through the chunked numpy dominance kernel
+    (:func:`_pareto_mask_sorted`), which is what keeps exact fronts over
+    10^5+ exhaustive-DSE candidates cheap; small or non-numeric inputs use
+    the scalar loop. The two agree exactly (property-tested)."""
+    items = list(items)
+    if len(items) >= _PARETO_VECTOR_MIN:
+        mat = _key_matrix(items, key)
+        if mat is not None:
+            order = _lexsort_rows(mat)
+            mask = _pareto_mask_sorted(mat[order])
+            return [items[i] for i in order[mask]]
     kept: List = []
     seen = set()
     for it in sorted(items, key=key):
@@ -294,6 +379,272 @@ def _score_back(model: ModelSpec, back: tuple, layer_maps, *,
                      interval_cycles=interval)
 
 
+# ---------------------------------------------------------------------------
+# Exhaustive mode: uncapped Pareto DP over the full mapping space, scored
+# by the batched Tier-A model (repro.core.perfmodel_batched)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _StateCands:
+    """Pareto-frontier candidates of one DP state, as parallel arrays.
+
+    ``key = (j, ports0)``: the state is the last layer's mapping index plus
+    the first layer's PLIO load ports. ``ports0`` is part of the key (not a
+    dominance axis) because the terminal shim-stage estimate is not monotone
+    in it — two prefixes only compare when they demand the same ingest
+    ports. ``par_state``/``par_idx`` chain back into the previous layer's
+    state list for mapping reconstruction."""
+
+    key: Tuple[int, int]
+    tiles: np.ndarray
+    cost: np.ndarray
+    mstage: np.ndarray
+    par_state: np.ndarray
+    par_idx: np.ndarray
+
+
+def _sorted_pareto(tiles, cost, mstage, extra: List[np.ndarray]):
+    """Lossless 3-D Pareto prune of one state's candidates (+ parallel
+    payload columns), returning everything lex-sorted and undominated."""
+    mat = np.stack([tiles.astype(np.float64), cost, mstage], axis=1)
+    order = _lexsort_rows(mat)
+    mask = _pareto_mask_sorted(mat[order])
+    idx = order[mask]
+    return tiles[idx], cost[idx], mstage[idx], [e[idx] for e in extra]
+
+
+def _exhaustive_frontier(model: ModelSpec, *, rows: int, cols: int, plio: int,
+                         dtype: str, p: OverheadParams, force_dma: bool,
+                         max_tiles_per_layer: Optional[int],
+                         include_plio: bool, chunk: int, obs: "_Telemetry"
+                         ) -> List[DSEResult]:
+    """Enumerate + score the *full* feasible per-layer tiling space.
+
+    Same Markov decomposition as :func:`_dp_finals`, but nothing is capped:
+    instead of a 24-deep {tiles, cost} frontier per state and a top-K
+    truncation of the finals, every DP state keeps its complete Pareto
+    frontier over {tiles, estimate latency, max pipeline stage} (the three
+    quantities through which a prefix influences any completion's final
+    {tiles, latency, II}), so the pruning is lossless w.r.t. the DP's
+    estimate-distance cost model: two prefixes in the same ``(last mapping,
+    ingest ports)`` state see identical suffix increments, hence a
+    dominated prefix cannot produce an estimate-frontier point. All
+    per-state transition costs are precomputed as numpy tables via the
+    batched Tier-A twins and applied to whole candidate arrays in
+    ``chunk``-bounded blocks; every surviving frontier design is then
+    placed for real and re-scored in one :func:`pmb.score_batch` pass
+    (exact Manhattan distances + the shim bandwidth cap), which restores
+    exactness for everything returned."""
+    total_tiles = rows * cols
+    per_layer_cap = max_tiles_per_layer or total_tiles
+    layer_maps: List[List[Mapping]] = []
+    for layer in model.layers:
+        ms = [m for m in enumerate_mappings(layer, per_layer_cap, dtype)
+              if m.rows <= rows and m.cols <= cols]
+        if not ms:
+            return []
+        layer_maps.append(ms)
+    n_layers = model.num_layers
+
+    # --- per-layer constant tables (batched Tier-A twins) ------------------
+    lA = [np.array([m.A for m in ms], np.int64) for ms in layer_maps]
+    lB = [np.array([m.B for m in ms], np.int64) for ms in layer_maps]
+    lC = [np.array([m.C for m in ms], np.int64) for ms in layer_maps]
+    lH1 = [np.array([m.H1 for m in ms], np.int64) for ms in layer_maps]
+    lW1 = [np.array([m.W1 for m in ms], np.int64) for ms in layer_maps]
+    lW2 = [np.array([m.W2 for m in ms], np.int64) for ms in layer_maps]
+    ltiles = [a * b * c for a, b, c in zip(lA, lB, lC)]
+    comp = {}
+    busy = {}
+    for i, layer in enumerate(model.layers):
+        kw = dict(A=lA[i], B=lB[i], C=lC[i], H1=lH1[i], W1=lW1[i], W2=lW2[i],
+                  is_agg=layer.kind == "agg",
+                  bias_relu=bool(layer.bias or layer.relu), p=p, dtype=dtype)
+        for cas in (False, True):
+            flag = np.full(len(layer_maps[i]), cas)
+            comp[i, cas] = pmb.layer_comp_cycles_v(out_cascade=flag, **kw)
+            busy[i, cas] = pmb.layer_busy_cycles_v(out_cascade=flag, **kw)
+
+    # --- per-edge transition tables [J_prev, J_next] -----------------------
+    trans_cost: List[np.ndarray] = []
+    trans_stage: List[np.ndarray] = []
+    for i in range(n_layers - 1):
+        mp, mn = layer_maps[i], layer_maps[i + 1]
+        is_cas = np.zeros((len(mp), len(mn)), bool)
+        if not force_dma:
+            for a, ma in enumerate(mp):
+                for b, mb in enumerate(mn):
+                    is_cas[a, b] = cascade_compatible(ma, mb)
+        rows_p = (lA[i] * lC[i])[:, None]
+        cols_p = lB[i][:, None]
+        d_est = cols_p + lB[i + 1][None, :] + np.abs(
+            rows_p - (lA[i + 1] * lC[i + 1])[None, :])
+        data = model.layers[i].out_bytes
+        ns = np.maximum(1, np.minimum((lA[i] * lC[i])[:, None],
+                                      (lA[i + 1] * lB[i + 1])[None, :]))
+        padded = pmb._ceil_div(data, ns) * ns
+        dma = pmb.dma_comm_cycles_v(padded, d_est, n_streams=ns, p=p)
+        ecost = np.where(is_cas, cascade_comm_cycles(p=p), dma)
+        ccost = np.where(is_cas, comp[i, True][:, None],
+                         comp[i, False][:, None])
+        bstage = np.where(is_cas, busy[i, True][:, None],
+                          busy[i, False][:, None])
+        trans_cost.append(ccost + ecost)
+        trans_stage.append(np.maximum(bstage, ecost))
+
+    # tightest completion any suffix can manage, for early tile pruning
+    min_rest = [0] * n_layers
+    for i in range(n_layers - 2, -1, -1):
+        min_rest[i] = min_rest[i + 1] + int(ltiles[i + 1].min())
+
+    # --- layer 0 states ----------------------------------------------------
+    first = model.layers[0]
+    states: List[_StateCands] = []
+    for j, m in enumerate(layer_maps[0]):
+        if m.tiles > total_tiles - min_rest[0]:
+            continue
+        if m.A * m.B > plio - 1:   # leave >=1 port for the last layer's store
+            continue
+        cost0 = (plio_cycles(first.in_bytes, m.A * m.B, p=p)
+                 if include_plio else 0.0)
+        states.append(_StateCands(
+            key=(j, m.A * m.B), tiles=np.array([m.tiles], np.int64),
+            cost=np.array([cost0]), mstage=np.array([0.0]),
+            par_state=np.array([-1], np.int64),
+            par_idx=np.array([-1], np.int64)))
+    levels = [states]
+    enumerated = len(states)
+    dp_states = len(states)
+
+    # --- forward sweep -----------------------------------------------------
+    for i in range(1, n_layers):
+        jn_count = len(layer_maps[i])
+        buffers: Dict[Tuple[int, int], List[Tuple[np.ndarray, ...]]] = {}
+        budget = total_tiles - min_rest[i]
+        for s_idx, st in enumerate(levels[-1]):
+            jp, p0 = st.key
+            tc = trans_cost[i - 1][jp]
+            ts = trans_stage[i - 1][jp]
+            n = len(st.tiles)
+            step = max(1, chunk // max(jn_count, 1))
+            for lo in range(0, n, step):
+                sl = slice(lo, min(lo + step, n))
+                tiles2 = st.tiles[sl][:, None] + ltiles[i][None, :]
+                cost2 = st.cost[sl][:, None] + tc[None, :]
+                mst2 = np.maximum(st.mstage[sl][:, None], ts[None, :])
+                feas = tiles2 <= budget
+                rows_idx = np.arange(sl.start, sl.stop, dtype=np.int64)
+                for jn in range(jn_count):
+                    ok = feas[:, jn]
+                    if not ok.any():
+                        continue
+                    buffers.setdefault((jn, p0), []).append((
+                        tiles2[ok, jn], cost2[ok, jn], mst2[ok, jn],
+                        np.full(int(ok.sum()), s_idx, np.int64),
+                        rows_idx[ok]))
+        nstates: List[_StateCands] = []
+        for key, parts in buffers.items():
+            tiles = np.concatenate([b[0] for b in parts])
+            cost = np.concatenate([b[1] for b in parts])
+            mstage = np.concatenate([b[2] for b in parts])
+            pstate = np.concatenate([b[3] for b in parts])
+            pidx = np.concatenate([b[4] for b in parts])
+            enumerated += len(tiles)
+            tiles, cost, mstage, (pstate, pidx) = _sorted_pareto(
+                tiles, cost, mstage, [pstate, pidx])
+            nstates.append(_StateCands(key=key, tiles=tiles, cost=cost,
+                                       mstage=mstage, par_state=pstate,
+                                       par_idx=pidx))
+        if not nstates:
+            return []
+        levels.append(nstates)
+        dp_states += len(nstates)
+
+    # --- terminals: close every candidate and take the global frontier -----
+    last = model.layers[-1]
+    fin_tiles, fin_cost, fin_ii, fin_state, fin_idx = [], [], [], [], []
+    for s_idx, st in enumerate(levels[-1]):
+        j, p0 = st.key
+        m = layer_maps[-1][j]
+        if p0 + m.A * m.C > plio:
+            continue
+        ccost = comp[n_layers - 1, False][j]
+        ocost = (plio_cycles(last.out_bytes, m.A * m.C, p=p)
+                 if include_plio else 0.0)
+        ii = np.maximum(st.mstage, busy[n_layers - 1, False][j])
+        if include_plio:
+            shim = (plio_cycles(first.in_bytes, p0, p=p)
+                    + plio_cycles(last.out_bytes, m.A * m.C, p=p))
+            ii = np.maximum(ii, shim)
+        fin_tiles.append(st.tiles)
+        fin_cost.append(st.cost + ccost + ocost)
+        fin_ii.append(ii)
+        fin_state.append(np.full(len(st.tiles), s_idx, np.int64))
+        fin_idx.append(np.arange(len(st.tiles), dtype=np.int64))
+    if not fin_tiles:
+        return []
+    tiles = np.concatenate(fin_tiles)
+    cost = np.concatenate(fin_cost)
+    ii = np.concatenate(fin_ii)
+    sstate = np.concatenate(fin_state)
+    sidx = np.concatenate(fin_idx)
+    obs.gauge("dse.exhaustive_candidates", float(enumerated))
+    obs.gauge("dse.dp_states", float(dp_states))
+    tiles, cost, ii, (sstate, sidx) = _sorted_pareto(tiles, cost, ii,
+                                                     [sstate, sidx])
+
+    # --- reconstruct mappings, place, re-score the batch exactly -----------
+    results: List[DSEResult] = []
+    placements: List[Placement] = []
+    metas: List[ModelMapping] = []
+    for s, r in zip(sstate, sidx):
+        back: List[int] = []
+        st = levels[-1][int(s)]
+        row = int(r)
+        for lvl in range(n_layers - 1, -1, -1):
+            back.append(st.key[0])
+            if lvl == 0:
+                break
+            nxt_state = int(st.par_state[row])
+            row = int(st.par_idx[row])
+            st = levels[lvl - 1][nxt_state]
+        back.reverse()
+        maps = tuple(layer_maps[i][j] for i, j in enumerate(back))
+        mm = ModelMapping(model=model, mappings=maps)
+        if not mm.fits(rows, cols, plio):
+            continue
+        pl = place(mm, rows, cols)
+        if pl is None:
+            continue
+        metas.append(mm)
+        placements.append(pl)
+    if not placements:
+        return []
+    batch = pmb.DesignBatch.from_placements(placements, dtype=dtype)
+    if force_dma:
+        batch.cascade = np.zeros_like(batch.cascade)
+    lat = pmb.end_to_end_cycles_v(batch, p=p, include_plio=include_plio)
+    interval = pmb.initiation_interval_cycles_v(batch, p=p,
+                                                include_plio=include_plio)
+    for k, (mm, pl) in enumerate(zip(metas, placements)):
+        links = pl.cascade_links()
+        if force_dma:
+            kinds = ["dma"] * (n_layers - 1)
+        else:
+            kinds = [("sharedmem" if mm.mappings[e + 1].layer.kind == "agg"
+                      else "cascade") if links[e] else "dma"
+                     for e in range(n_layers - 1)]
+        breakdown = LatencyBreakdown(
+            plio_in=float(lat.plio_in[k]), comp=list(lat.comp[k]),
+            comm=list(lat.comm[k]), comm_kind=kinds,
+            plio_out=float(lat.plio_out[k]))
+        results.append(DSEResult(
+            model=model, mapping=mm, placement=pl, latency=breakdown,
+            candidates_scored=enumerated, dp_states=dp_states,
+            interval_cycles=float(interval[k])))
+    return results
+
+
 def explore(model: ModelSpec, *,
             rows: int = aie_arch.ARRAY_ROWS,
             cols: int = aie_arch.ARRAY_COLS,
@@ -346,6 +697,8 @@ def search(model: ModelSpec, *,
            max_tiles_per_layer: Optional[int] = None,
            top_k: int = 96,
            include_plio: bool = True,
+           exhaustive: bool = False,
+           chunk: int = 1 << 16,
            rescore: Optional[Callable[[DSEResult], float]] = None,
            registry=None, tracer=None) -> List[DSEResult]:
     """Placement-validated Pareto frontier over {tiles, latency, II}.
@@ -368,12 +721,28 @@ def search(model: ModelSpec, *,
     whose analytic rank survives only by ignoring execution effects drop
     off the frontier.
 
+    ``exhaustive=True`` sweeps the *full* feasible per-layer tiling space
+    instead of the heuristic top-K: an uncapped Pareto DP (no 24-deep
+    per-state frontier, no finals truncation — see
+    :func:`_exhaustive_frontier`) whose transition costs are numpy tables
+    from the batched Tier-A twins (:mod:`repro.core.perfmodel_batched`),
+    processed in ``chunk``-bounded blocks to bound memory. Every surviving
+    design is placed and re-scored exactly in one batched pass, then
+    *unioned* with the top-K path's designs (the DP prunes on
+    estimate-distance costs, so the cross-check guarantees the returned
+    frontier is a superset-or-equal of the top-K frontier) and filtered
+    once more on the exact {tiles, latency, II} values. The result is the
+    exact frontier of the estimate-swept space rather than a 96-sample of
+    it — ``benchmarks/dse_throughput.py`` reports the points it finds that
+    top-K missed.
+
     ``registry`` (a :class:`repro.obs.MetricsRegistry`) and ``tracer``
     (a :class:`repro.obs.Tracer`) record search telemetry: counters
     ``dse.candidates_evaluated`` / ``dse.pareto_survivors`` /
     ``dse.rescore_invocations`` and per-phase wall time ``dse.walltime_s``
-    (phases ``dp``, ``score``, ``rescore``), plus a span per phase on the
-    ``dse`` trace lane.
+    (phases ``dp``, ``score``, ``rescore``, and for exhaustive mode
+    ``exhaustive``), plus a span per phase on the ``dse`` trace lane and
+    gauges ``dse.exhaustive_candidates`` / ``dse.dp_states``.
     """
     obs = _Telemetry(registry, tracer, model.name)
     with obs.phase("dp"):
@@ -396,6 +765,20 @@ def search(model: ModelSpec, *,
                 scored.append(cand)
     for cand in scored:
         cand.candidates_scored = len(scored)
+    if exhaustive:
+        with obs.phase("exhaustive"):
+            ex = _exhaustive_frontier(
+                model, rows=rows, cols=cols, plio=plio, dtype=dtype, p=p,
+                force_dma=force_dma,
+                max_tiles_per_layer=max_tiles_per_layer,
+                include_plio=include_plio, chunk=chunk, obs=obs)
+        # Union with the top-K designs: the exhaustive DP prunes on the
+        # estimate-distance cost model, so keeping the top-K set alongside
+        # guarantees no previously-found Pareto point is lost; the final
+        # exact filter below arbitrates on real placement scores.
+        sig = lambda d: tuple((m.A, m.B, m.C) for m in d.mapping.mappings)
+        seen_sigs = {sig(d) for d in scored}
+        scored.extend(d for d in ex if sig(d) not in seen_sigs)
     if rescore is not None:
         with obs.phase("rescore"):
             for cand in scored:

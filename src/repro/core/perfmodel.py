@@ -10,6 +10,22 @@ Two modes:
 Ground-truth measurement tables from the paper are embedded here; they are
 the calibration + validation data and the reference for the Fig. 9 model-error
 reproduction.
+
+Scalar <-> batched contract
+---------------------------
+
+This module is the scalar *reference*; :mod:`repro.core.perfmodel_batched`
+holds vectorized twins (``single_aie_cycles`` -> ``single_aie_cycles_v``,
+``end_to_end_cycles`` -> ``end_to_end_cycles_v``, ...) that score ``[N]``
+candidate designs per call for the exhaustive DSE and the throughput
+benchmarks. The contract is **bit-identical results**, not approximate
+agreement: the twins replicate this module's exact operation order
+(integer ceil-divisions instead of float ``math.ceil``, left-to-right
+summation instead of numpy's pairwise reduction), and the parity tests in
+``tests/test_perfmodel_batched.py`` assert ``==`` on every Table 2 shape
+and every DSE frontier design. When editing a formula here, mirror the
+change in the twin — the tests (and the calibration gate in CI) catch any
+divergence.
 """
 from __future__ import annotations
 

@@ -485,6 +485,7 @@ def throughput_frontier(model: ModelSpec, *,
                         contention: str = "analytic",
                         pipelined: bool = True,
                         sim_events: int = 8,
+                        exhaustive: bool = False,
                         registry=None, tracer=None) -> List[ThroughputPoint]:
     """Throughput-aware DSE: sweep the latency/replica-count trade-off.
 
@@ -505,12 +506,18 @@ def throughput_frontier(model: ModelSpec, *,
     pre-pipelining model. Every point carries *both* rate families
     regardless of the ranking basis (the non-ranking family is priced
     analytically when ``contention="sim"``).
+
+    ``exhaustive=True`` forwards to :func:`repro.core.dse.search`: the
+    replica packing then starts from the *exact* single-instance frontier
+    rather than the top-k approximation — slower, but any frontier point
+    the top-k DP missed becomes a packing candidate too.
     """
     if contention not in ("none", "analytic", "sim"):
         raise ValueError(f"unknown contention model {contention!r}")
     points: List[ThroughputPoint] = []
     for design in dse.search(model, rows=rows, cols=cols, plio=plio, p=p,
-                             top_k=top_k, registry=registry, tracer=tracer):
+                             top_k=top_k, exhaustive=exhaustive,
+                             registry=registry, tracer=tracer):
         sched = pack_max_replicas(design, rows=rows, cols=cols, plio=plio,
                                   cap=max_replicas_cap)
         if sched is None:
@@ -578,6 +585,7 @@ def pack_mix(mix: Sequence[Tuple[str, ModelSpec, int]], *,
              plio: int = aie_arch.PLIO_PORTS,
              p: OverheadParams = OVERHEADS,
              top_k: int = 96,
+             exhaustive: bool = False,
              registry=None) -> Optional[ArraySchedule]:
     """Schedule a heterogeneous tenant mix ``[(name, model, replicas), ...]``.
 
@@ -586,12 +594,16 @@ def pack_mix(mix: Sequence[Tuple[str, ModelSpec, int]], *,
     design on its {tiles, latency} frontier — trading that tenant's latency
     for fleet feasibility. Returns None when even the smallest designs do
     not fit together. ``registry`` records ``tenancy.pack.attempts`` and
-    ``tenancy.pack.backoffs`` counters.
+    ``tenancy.pack.backoffs`` counters. ``exhaustive=True`` builds every
+    tenant's back-off ladder from the exact frontier (see
+    :func:`repro.core.dse.search`), which can surface intermediate rungs
+    the top-k DP missed and so soften a back-off step.
     """
     frontiers: List[List[DSEResult]] = []
     for name, model, count in mix:
         fr = dse.search(model, rows=rows, cols=cols, plio=plio, p=p,
-                        top_k=top_k, registry=registry)
+                        top_k=top_k, exhaustive=exhaustive,
+                        registry=registry)
         if not fr or count < 1:
             return None
         # Back-off ladder: the {tiles, latency} sub-frontier of the grown

@@ -46,9 +46,20 @@ as labels (never baked into the name):
   ``dse.candidates_evaluated``       counter {model}
   ``dse.pareto_survivors``           counter {model}
   ``dse.rescore_invocations``        counter {model}
-  ``dse.walltime_s``                 gauge   {model, phase: dp|score|rescore}
+  ``dse.walltime_s``                 gauge   {model, phase: dp|score|
+                                     rescore|exhaustive}
+  ``dse.exhaustive_candidates``      gauge   {model} — designs enumerated
+                                     by ``search(exhaustive=True)``
   ``tenancy.frontier.points``        counter {model}
   ``tenancy.pack.backoffs``          counter {}
+  ``calib.fit.r2`` / ``calib.fit.mape``  gauge {family: single_aie|cascade|
+                                     dma|agg|overall} — calibration fit
+                                     quality per sweep family (CI-gated)
+  ``calib.param.value``              gauge   {param} — fitted overhead
+                                     constant (compare against the frozen
+                                     ``OverheadParams`` default)
+  ``calib.sweep.points`` / ``calib.stage.drifted``  gauge {} — sweep size
+                                     and count of drifting pipeline stages
 
 Drift-ratio semantics
 ---------------------
@@ -62,7 +73,14 @@ model. Two families are reported side by side and must not be conflated:
   * ``model.*`` metrics compare Tier-A analytic predictions against
     Tier-S simulated execution of the *same placement* — both are models
     of the VEK280, so the ratio should sit at ~1.0 and its MAPE is a
-    CI-gateable regression signal (the ``--drift-gate`` flag).
+    CI-gateable regression signal (the ``--drift-gate`` flag). The
+    per-stage sub-family ``model.stage.{shim|comp|comm}`` (keys
+    ``{design}/{stage}``, written by ``repro.core.calibrate``) localizes a
+    total-latency drift to the pipeline stage that moved; map the stage
+    kind to its suspect overhead constants via
+    ``repro.core.calibrate.STAGE_SUSPECTS`` and
+    :meth:`DriftMonitor.localize`. ``calib.param`` entries (expect =
+    frozen constant, observe = fitted) rank the constants themselves.
   * ``serve.*`` metrics compare the modeled VEK280 numbers against
     *wall-clock CPU interpret-mode* serving, where the ratio is expected
     to be orders of magnitude above 1 — it tracks relative drift of the

@@ -97,6 +97,25 @@ class DriftMonitor:
         return [e for e in self.entries(metric)
                 if e.ape is not None and e.ape > threshold]
 
+    def localize(self, threshold: float, prefix: str = "model.stage."
+                 ) -> List[DriftEntry]:
+        """Drifted entries under a metric-name prefix, worst first.
+
+        The localization counterpart of :meth:`mape`: where the total
+        latency/II drift says *that* the model moved, the per-stage entries
+        (metrics ``model.stage.shim`` / ``model.stage.comp`` /
+        ``model.stage.comm``, one key per pipeline stage of each design)
+        say *where* — which narrows the drift to the overhead constants
+        priced into that stage class (see
+        :data:`repro.core.calibrate.STAGE_SUSPECTS`). Use
+        ``prefix="calib.param"`` to rank the fitted-vs-frozen constants
+        themselves after a calibration run.
+        """
+        hits = [e for (_, m), e in self._entries.items()
+                if m.startswith(prefix)
+                and e.ape is not None and e.ape > threshold]
+        return sorted(hits, key=lambda e: -(e.ape or 0.0))
+
     def summary(self) -> dict:
         """fig9-style report: per-metric MAPE + per-entry ratios."""
         per_metric: Dict[str, dict] = {}

@@ -202,6 +202,46 @@ class SimResult:
                 best_name, best_util = r.name, u
         return best_name, best_util
 
+    def stage_occupancy_cycles(self, instance: int = 0) -> Dict[str, float]:
+        """Measured per-event occupancy of each pipeline stage of one
+        instance, keyed by the :func:`repro.core.perfmodel.pipeline_stages`
+        stage names (``shim``, ``L{i}:{layer}``, ``L{i}>L{i+1}:{kind}``).
+
+        Attribution filters resource spans by the instance's task-name
+        prefix, so the numbers stay exact per instance even on shared shim
+        columns — where a co-resident tenant's transfers then surface as
+        *measured* shim-stage cycles above the analytic expectation. This
+        is the measured side of the per-stage drift comparison
+        (:meth:`repro.obs.DriftMonitor`): a single-tenant run reproduces
+        every analytic stage exactly, so any per-stage drift localizes the
+        overhead constant that moved (see :mod:`repro.core.calibrate`).
+        """
+        inst = self.instances[instance]
+        n_events = max(1, len(inst.event_tasks))
+        pfx = f"{inst.label}."
+
+        def _busy(res) -> float:
+            return sum(e - s for n, s, e, _ in res.spans
+                       if n.startswith(pfx))
+
+        out: Dict[str, float] = {}
+        if self.config.include_plio:
+            out["shim"] = max(
+                (_busy(r) / n_events
+                 for r in self.arr.shim_resources().values()), default=0.0)
+        maps = inst.placement.model_mapping.mappings
+        for i, (m, rect) in enumerate(zip(maps, inst.placement.rects)):
+            busiest = 0.0
+            for lr in range(m.rows):
+                for lc in range(m.cols):
+                    tile = self.arr.tile(rect.r0 + lr, rect.c0 + lc)
+                    busiest = max(busiest, _busy(tile) / n_events)
+            out[f"L{i}:{m.layer.name or m.layer.kind}"] = busiest
+        for i, (kind, _, _) in enumerate(inst.event_tasks[0]["edges"]):
+            res = self.arr.edge(f"{inst.label}.L{i}>L{i + 1}", kind)
+            out[f"L{i}>L{i + 1}:{kind}"] = _busy(res) / n_events
+        return out
+
     def export_metrics(self, registry=None):
         """Emit the run's telemetry into a :class:`repro.obs.MetricsRegistry`.
 
@@ -410,6 +450,29 @@ def simulated_latency_cycles(placement: Placement, *,
                              config: Optional[SimConfig] = None) -> float:
     cfg = config or SimConfig(events=1, trace=False)
     return simulate_placement(placement, p=p, config=cfg).latency_cycles
+
+
+def sweep_latency_cycles(placements, *, p: OverheadParams = OVERHEADS,
+                         config: Optional[SimConfig] = None,
+                         stages: bool = False):
+    """Tier-S sweep driver: simulate each placement and return the measured
+    end-to-end cycles as a list (same order as ``placements``).
+
+    This is the measurement hook of the calibration harness
+    (:mod:`repro.core.calibrate`): the analytic model is least-squares-fit
+    against exactly these numbers. ``stages=True`` additionally returns one
+    :meth:`SimResult.stage_occupancy_cycles` dict per placement for the
+    per-stage drift localization path.
+    """
+    cfg = config or SimConfig(events=1, trace=False)
+    lats: List[float] = []
+    stage_dicts: List[Dict[str, float]] = []
+    for pl in placements:
+        res = simulate_placement(pl, p=p, config=cfg)
+        lats.append(res.latency_cycles)
+        if stages:
+            stage_dicts.append(res.stage_occupancy_cycles())
+    return (lats, stage_dicts) if stages else lats
 
 
 def rescorer(*, p: OverheadParams = OVERHEADS,

@@ -1,0 +1,178 @@
+"""Batched Tier-A twins vs the scalar model, and the calibration fit.
+
+The contract under test (see the ``perfmodel_batched`` module docstring):
+every ``*_v`` twin replicates its scalar counterpart's operation order, so
+batched and scalar results are *bit-identical*, not merely close. The
+assertions below therefore use exact equality wherever the contract
+promises it and only fall back to tolerances for the least-squares fit.
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import calibrate, dse, perfmodel
+from repro.core import perfmodel_batched as pmb
+from repro.core.aie_arch import OVERHEADS
+from repro.core.layerspec import (LayerSpec, ModelSpec, REALISTIC_WORKLOADS,
+                                  deepsets)
+from repro.core.mapping import ModelMapping, enumerate_mappings
+from repro.core.placement import place
+
+
+def _frontier_placements(name):
+    designs = dse.search(REALISTIC_WORKLOADS[name]())
+    assert designs
+    return designs, [d.placement for d in designs]
+
+
+class TestBatchedParity:
+    @pytest.mark.parametrize("bias_relu", [False, True])
+    def test_table2_single_aie_shapes(self, bias_relu):
+        shapes = list(perfmodel.TABLE2_NS)
+        arr = np.array(shapes, dtype=np.int64)
+        got = pmb.single_aie_cycles_v(arr[:, 0], arr[:, 1], arr[:, 2],
+                                      bias_relu=bias_relu)
+        for (m, k, n), g in zip(shapes, got):
+            want = perfmodel.single_aie_cycles(m, k, n, bias_relu=bias_relu)
+            assert g == want, (m, k, n)
+
+    @pytest.mark.parametrize("name", sorted(REALISTIC_WORKLOADS))
+    def test_end_to_end_and_ii_on_frontier_designs(self, name):
+        designs, pls = _frontier_placements(name)
+        batch = pmb.DesignBatch.from_placements(pls)
+        lat = pmb.end_to_end_cycles_v(batch)
+        ii = pmb.initiation_interval_cycles_v(batch)
+        for j, (d, pl) in enumerate(zip(designs, pls)):
+            want = d.latency
+            assert lat.plio_in[j] == want.plio_in
+            assert lat.plio_out[j] == want.plio_out
+            assert list(lat.comp[j]) == want.comp
+            assert list(lat.comm[j]) == want.comm
+            assert lat.total[j] == want.total
+            assert ii[j] == perfmodel.initiation_interval_cycles(pl)
+
+    @pytest.mark.parametrize("ideal", [False, True])
+    def test_score_batch_matches_scalar(self, ideal):
+        _, pls = _frontier_placements("Deepsets-32")
+        batch = pmb.DesignBatch.from_placements(pls)
+        tiles, lat, ii = pmb.score_batch(batch, ideal=ideal)
+        for j, pl in enumerate(pls):
+            mm = pl.model_mapping
+            assert tiles[j] == mm.total_tiles
+            assert lat[j] == perfmodel.end_to_end_cycles(
+                pl, ideal=ideal).total
+            assert ii[j] == perfmodel.initiation_interval_cycles(
+                pl, ideal=ideal)
+
+    def test_stage_cycles_match_pipeline_stages(self):
+        _, pls = _frontier_placements("JSC-M")
+        batch = pmb.DesignBatch.from_placements(pls)
+        stages = pmb.stage_cycles_v(batch)
+        for j, pl in enumerate(pls):
+            want = [s.cycles for s in perfmodel.pipeline_stages(pl).stages]
+            assert list(stages[j]) == want
+
+    def test_random_mapping_chains(self):
+        """Seeded random (not just frontier-optimal) mapping chains: the
+        twins must agree off the DSE's beaten path too."""
+        rng = random.Random(20260807)
+        spec = REALISTIC_WORKLOADS["Deepsets-32"]()
+        per_layer = [list(enumerate_mappings(l, 16)) for l in spec.layers]
+        pls = []
+        while len(pls) < 25:
+            mm = ModelMapping(model=spec, mappings=tuple(
+                rng.choice(opts) for opts in per_layer))
+            if not mm.fits():
+                continue
+            pl = place(mm)
+            if pl is not None:
+                pls.append(pl)
+        batch = pmb.DesignBatch.from_placements(pls)
+        lat = pmb.end_to_end_cycles_v(batch).total
+        ii = pmb.initiation_interval_cycles_v(batch)
+        for j, pl in enumerate(pls):
+            assert lat[j] == perfmodel.end_to_end_cycles(pl).total
+            assert ii[j] == perfmodel.initiation_interval_cycles(pl)
+
+
+class TestExhaustiveSearch:
+    def test_exhaustive_covers_topk_frontier(self):
+        spec = REALISTIC_WORKLOADS["Deepsets-32"]()
+        topk = dse.search(spec)
+        exact = dse.search(spec, exhaustive=True)
+        assert len(exact) >= len(topk) - len(topk) // 2  # sanity: nonempty
+        ex_pts = [(d.mapping.total_tiles, d.latency.total,
+                   perfmodel.initiation_interval_cycles(d.placement))
+                  for d in exact]
+        for d in topk:
+            t, lat = d.mapping.total_tiles, d.latency.total
+            ii = perfmodel.initiation_interval_cycles(d.placement)
+            assert any(et <= t and el <= lat + 1e-9 and ei <= ii + 1e-9
+                       for et, el, ei in ex_pts), (t, lat, ii)
+
+    def test_exhaustive_designs_are_legal_and_scored_exactly(self):
+        spec = deepsets(32, 21, [32, 32], [32, 5], name="ds-small")
+        for d in dse.search(spec, exhaustive=True):
+            assert d.mapping.fits()
+            assert d.placement is not None
+            assert d.latency.total == perfmodel.end_to_end_cycles(
+                d.placement).total
+
+
+class TestCalibration:
+    def test_design_matrix_full_rank(self):
+        pts = calibrate.default_sweep(smoke=True)
+        names = [[s.name for s in
+                  perfmodel.pipeline_stages(pt.placement).stages]
+                 for pt in pts]
+        A, _ = calibrate.design_matrix(pts, stage_names=names)
+        assert np.linalg.matrix_rank(A) == len(calibrate.FIT_PARAMS)
+
+    def test_round_trip_recovers_planted_constants(self):
+        """Perturb every fit constant, synthesize 'measured' cycles from
+        the scalar model under the planted values, fit — the planted
+        values must come back and R^2 must be ~1."""
+        rng = np.random.default_rng(11)
+        planted = dataclasses.replace(OVERHEADS, **{
+            k: getattr(OVERHEADS, k) * (1 + 0.25 * rng.standard_normal())
+            + 2.0 for k in calibrate.FIT_PARAMS})
+        pts = calibrate.default_sweep(smoke=True)
+        meas = [perfmodel.end_to_end_cycles(pt.placement, p=planted).total
+                for pt in pts]
+        stages = [{s.name: s.cycles for s in
+                   perfmodel.pipeline_stages(pt.placement, p=planted).stages}
+                  for pt in pts]
+        report = calibrate.fit(pts, meas, stage_measured=stages)
+        for k in calibrate.FIT_PARAMS:
+            assert getattr(report.fitted, k) == pytest.approx(
+                getattr(planted, k), abs=1e-6), k
+        assert report.overall_r2 == pytest.approx(1.0, abs=1e-9)
+        assert not report.gate_errors()
+
+    def test_sim_calibration_is_exact_and_gates_pass(self):
+        """The Tier-S sweep prices with the same formulas, so the fit must
+        recover the frozen constants and report zero per-stage drift."""
+        report, _, mon, drift = calibrate.run_calibration(smoke=True)
+        assert report.overall_r2 == pytest.approx(1.0, abs=1e-9)
+        assert not report.gate_errors()
+        assert drift == 0
+        for k in calibrate.FIT_PARAMS:
+            rec = report.params[k]
+            assert rec["fitted"] == pytest.approx(rec["frozen"], abs=1e-6)
+        # fitted-vs-frozen localization ranks by |ratio - 1|
+        assert mon.localize(10.0, prefix="calib.param") == []
+
+    def test_gate_errors_fire_on_bad_fit(self):
+        pts = calibrate.default_sweep(["single_aie"], smoke=True)
+        meas = [2.5 * perfmodel.end_to_end_cycles(pt.placement).total + 500
+                for pt in pts]     # wildly off measurements, no stage rows
+        report = calibrate.fit(pts, meas)
+        # the affine fit absorbs scale errors imperfectly -> nonzero MAPE;
+        # with a tight gate the report must flag it
+        assert report.gate_errors(mape_max=1e-12, r2_min=1.0 - 1e-15)
+
+    def test_stage_suspects_cover_all_fit_params(self):
+        covered = {p for ps in calibrate.STAGE_SUSPECTS.values() for p in ps}
+        assert covered == set(calibrate.FIT_PARAMS)
