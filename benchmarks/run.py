@@ -1,16 +1,24 @@
 """Benchmark orchestrator: one module per paper table/figure + the Tier-B
 TPU benches. ``python -m benchmarks.run [name ...]`` runs all (or selected)
 and prints a summary of the key derived quantities per benchmark.
+
+``--history`` additionally persists each benchmark's headline scalars to
+``BENCH_<name>.json`` at the repo root (plus git rev and date) and warns
+when a scalar moved more than 10% against the committed baseline — the
+lightweight regression ledger the CI diff surfaces in review.
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
+import os
+import subprocess
 import time
 
 from . import (dse_quality, dse_throughput, fig9_perfmodel_error,
-               fig10_synthetic_mlp, fig11_realistic, roofline_report,
-               sim_vs_model, table2_single_aie, table4_global_agg,
-               throughput_pareto, tpu_cascade_fusion)
+               fig10_synthetic_mlp, fig11_realistic, latency_under_load,
+               roofline_report, sim_vs_model, table2_single_aie,
+               table4_global_agg, throughput_pareto, tpu_cascade_fusion)
 
 BENCHES = {
     "table2_single_aie": table2_single_aie.main,
@@ -25,11 +33,63 @@ BENCHES = {
     "throughput_pareto": throughput_pareto.main,
     "pipelined_throughput": throughput_pareto.pipelined_headline,
     "sim_vs_model": sim_vs_model.main,
+    "latency_under_load": latency_under_load.main,
 }
 
 
-def main() -> None:
-    names = sys.argv[1:] or list(BENCHES)
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+REGRESSION_WARN = 0.10
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            stderr=subprocess.DEVNULL).decode().strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def _update_history(name: str, res: dict, dt: float) -> None:
+    """Write BENCH_<name>.json; warn on >10% drift vs the committed prior."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    scalars = {k: v for k, v in res.items()
+               if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    if os.path.exists(path):
+        with open(path) as f:
+            prior = json.load(f)
+        for k, new in scalars.items():
+            old = prior.get("results", {}).get(k)
+            if not isinstance(old, (int, float)) or old == 0:
+                continue
+            change = abs(new - old) / abs(old)
+            if change > REGRESSION_WARN:
+                print(f"[bench] WARNING {name}.{k}: {old:.4g} -> {new:.4g} "
+                      f"({100 * change:.1f}% change vs baseline "
+                      f"{prior.get('git_rev', '?')})")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "git_rev": _git_rev(),
+                   "date": time.strftime("%Y-%m-%d"),
+                   "seconds": round(dt, 1), "results": scalars}, f,
+                  indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[bench] history -> {path}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("names", nargs="*", metavar="name",
+                    help=f"benchmarks to run (default: all of "
+                         f"{', '.join(BENCHES)})")
+    ap.add_argument("--history", action="store_true",
+                    help="persist headline scalars to BENCH_<name>.json at "
+                         "the repo root; warn on >10%% drift vs the "
+                         "committed baseline")
+    args = ap.parse_args(argv)
+    for n in args.names:
+        if n not in BENCHES:
+            ap.error(f"unknown benchmark {n!r} (choices: {list(BENCHES)})")
+    names = args.names or list(BENCHES)
     summary = []
     for name in names:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
@@ -37,6 +97,8 @@ def main() -> None:
         res = BENCHES[name]() or {}
         dt = time.time() - t0
         summary.append((name, dt, res))
+        if args.history:
+            _update_history(name, res, dt)
     print(f"\n{'=' * 72}\n== summary\n{'=' * 72}")
     print("benchmark,seconds,key=value ...")
     for name, dt, res in summary:

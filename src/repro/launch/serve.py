@@ -22,9 +22,20 @@ with both the serial R/latency events/sec and the pipelined headline —
 initiation interval II, sustained events/sec, and the contended pipelined
 throughput-frontier point the deployment should be measured against.
 
+Open-loop load and SLOs (the observatory half): ``--arrivals`` replaces
+the back-to-back batched dispatch with a seeded wall-clock arrival
+process offered through the fleet's admission control (offered vs
+admitted vs shed counters, queue-wait histograms); ``--slo`` attaches
+per-tenant SLOs — p99 latency budget in us plus an availability target —
+with windowed error-budget accounting and multi-window burn-rate alerts.
+The driver exits 1 when any tenant's error budget is exhausted, and
+``--slo-report-out`` persists the cross-tenant ``SLOReport`` JSON.
+
     PYTHONPATH=src python -m repro.launch.serve --model deepsets-32 --events 256
     PYTHONPATH=src python -m repro.launch.serve --replicas 4
     PYTHONPATH=src python -m repro.launch.serve --mix deepsets-32,jsc-m --replicas 2
+    PYTHONPATH=src python -m repro.launch.serve --replicas 2 \\
+        --arrivals poisson:200 --slo 50000:0.95 --slo-report-out slo.json
 """
 from __future__ import annotations
 
@@ -177,17 +188,77 @@ def _check_drift_gate(snap: dict, gate: float) -> None:
     """Exit nonzero when the model-path (Tier-A vs Tier-S) MAPE exceeds the
     gate. serve.* drift is never gated: interpret-mode CPU wall clock sits
     orders of magnitude above the modeled VEK280 by construction."""
-    mapes = [d["mape"] for m, d in snap.get("drift", {}).items()
-             if m.startswith("model.") and d.get("mape") is not None]
-    if not mapes:
+    drift = {m: d for m, d in snap.get("drift", {}).items()
+             if m.startswith("model.") and d.get("mape") is not None}
+    if not drift:
         raise SystemExit("[fleet] drift gate: no model.* drift entries "
                          "populated (missing model_spec?)")
-    worst = max(mapes)
+    worst = max(d["mape"] for d in drift.values())
     ok = worst <= gate
     print(f"[fleet] drift gate: worst model-path MAPE {100 * worst:.2f}% "
           f"vs threshold {100 * gate:.2f}% -> {'PASS' if ok else 'FAIL'}")
     if not ok:
+        # Localize before failing: name the drifted entries and, for
+        # model.stage.* metrics, the overhead constants they implicate.
+        for m, d in sorted(drift.items(), key=lambda kv: -kv[1]["mape"]):
+            if d["mape"] <= gate:
+                continue
+            flagged = d.get("flagged") or list(d.get("entries", {}))
+            line = (f"[fleet] drift gate: {m} MAPE {100 * d['mape']:.2f}% "
+                    f"— flagged {flagged}")
+            if d.get("suspects"):
+                line += f", suspect constants {d['suspects']}"
+            print(line)
         raise SystemExit(1)
+
+
+def _drive_open_loop(fleet: FleetServer, name: str, prep: dict, xq, y,
+                     args) -> None:
+    """Offer the tenant's event stream on the --arrivals schedule."""
+    from repro.serve import workload
+    spec = args.arrival_spec
+    dr = workload.drive(fleet, list(xq), spec, tenant=name, seed=args.seed)
+    for r in dr.requests:
+        r.event.wait(timeout=120)
+    print(f"[fleet] {name}: {spec.describe()} -> offered {dr.offered} "
+          f"({dr.offered_eps:.0f}/s), admitted {dr.admitted}, "
+          f"shed {dr.shed}, driver lag {dr.lag_s * 1e3:.1f} ms")
+    if dr.requests:
+        adm = np.asarray(dr.admitted_idx)
+        preds = np.array([int(np.argmax(r.result[..., :prep["n_classes"]]))
+                          for r in dr.requests])
+        acc_q = float((preds == y[adm]).mean())
+        lats = np.array([r.latency_us for r in dr.requests])
+        waits = np.array([r.queue_wait_us for r in dr.requests])
+        print(f"[fleet] {name}: float acc {prep['acc_float']:.3f}, "
+              f"INT8 acc {acc_q:.3f} (admitted events)")
+        print(f"[fleet] {name}: open-loop p50 "
+              f"{float(np.percentile(lats, 50)):.0f} us, p99 "
+              f"{float(np.percentile(lats, 99)):.0f} us; queue wait p50 "
+              f"{float(np.percentile(waits, 50)):.0f} us, p99 "
+              f"{float(np.percentile(waits, 99)):.0f} us")
+
+
+def _report_slo(fleet: FleetServer, args) -> "object":
+    """Print each tenant's budget state; persist and return the SLOReport."""
+    report = fleet.slo_snapshot()
+    for name, s in report.tenants.items():
+        spec = s["spec"]
+        state = "EXHAUSTED" if s["exhausted"] else "ok"
+        print(f"[slo] {name}: p99 budget {spec['p99_latency_budget_ns'] / 1e3:.0f} us"
+              f" @ {spec['availability']:.3g} availability | "
+              f"good {s['good']}, bad {s['bad']}, shed {s['shed']} | "
+              f"burn rate {s['burn_rate_window']:.2f}x, budget remaining "
+              f"{100 * s['error_budget_remaining']:.1f}% [{state}]")
+        for a in s["alerts"]:
+            print(f"[slo] {name}: ALERT {a['severity']} — burn "
+                  f"{a['burn_long']:.1f}x/{a['burn_short']:.1f}x over "
+                  f"{a['long_s']:g}s/{a['short_s']:g}s windows "
+                  f"(threshold {a['threshold']:g}x)")
+    if args.slo_report_out:
+        report.save(args.slo_report_out)
+        print(f"[slo] report -> {args.slo_report_out}")
+    return report
 
 
 def _serve_fleet(preps: dict, args) -> None:
@@ -201,13 +272,22 @@ def _serve_fleet(preps: dict, args) -> None:
                                    "mix": ",".join(preps),
                                    "policy": args.policy})
     fleet = FleetServer([p["tenant"] for p in preps.values()],
-                        policy=args.policy, interpret=True, tracer=tracer)
+                        policy=args.policy, interpret=True, tracer=tracer,
+                        slos=args.slo_specs,
+                        admission_depth=args.admission_depth)
     print(f"\n[fleet] {fleet.num_replicas} replicas across "
           f"{len(preps)} tenant(s), policy={args.policy}")
+    open_loop = (args.arrival_spec is not None
+                 and args.arrival_spec.open_loop)
     for name, prep in preps.items():
         x, y = jet_batch(prep["jc"], args.events, 999)
         xq = np.clip(np.round(x / 2.0 ** prep["e_in"]), -128,
                      127).astype(np.int8)
+        if open_loop:
+            # Open-loop: events are *offered* on the arrival schedule and
+            # the fleet's admission control decides admitted vs shed.
+            _drive_open_loop(fleet, name, prep, xq, y, args)
+            continue
         # Micro-batched dispatch: the event stream is sliced across the
         # tenant's replicas (scatter), each slice rides one replica's
         # batching window as a single kernel launch, results gather back in
@@ -273,6 +353,12 @@ def _serve_fleet(preps: dict, args) -> None:
                       f"Meps sustained ({fp['contention']} contention)")
     if args.drift_gate is not None and telemetry is not None:
         _check_drift_gate(telemetry, args.drift_gate)
+    if fleet.slo_trackers:
+        report = _report_slo(fleet, args)
+        if not report.ok:
+            print(f"[slo] error budget exhausted for "
+                  f"{report.exhausted_tenants} -> exit 1")
+            raise SystemExit(report.exit_code())
 
 
 def main() -> None:
@@ -298,6 +384,25 @@ def main() -> None:
     ap.add_argument("--drift-gate", type=float, default=None,
                     help="fail (exit 1) when the Tier-A-vs-Tier-S model-path "
                          "drift MAPE exceeds this fraction (e.g. 0.05)")
+    ap.add_argument("--arrivals", type=str, default=None,
+                    help="open-loop arrival process (same grammar as "
+                         "repro.launch.simulate): closed | poisson:<eps> | "
+                         "burst:<eps>[:<cv>] | trace:<file>; rates are "
+                         "wall-clock events/sec on this host")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="arrival RNG seed (reproducible --arrivals runs)")
+    ap.add_argument("--slo", type=str, default=None,
+                    help="per-tenant SLOs: <p99_us>[:<avail>] for every "
+                         "tenant or name=<p99_us>[:<avail>],... ; the driver "
+                         "exits 1 when any tenant's error budget is "
+                         "exhausted")
+    ap.add_argument("--slo-window", type=float, default=60.0,
+                    help="SLO error-budget accounting window in seconds")
+    ap.add_argument("--slo-report-out", type=str, default=None,
+                    help="write the cross-tenant SLOReport JSON")
+    ap.add_argument("--admission-depth", type=int, default=None,
+                    help="shed offered events when every replica queue is "
+                         "at/above this depth (None = never shed)")
     args = ap.parse_args()
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
@@ -310,11 +415,31 @@ def main() -> None:
     if len(set(names)) != len(names):
         ap.error(f"--mix has duplicate model names: {names}")
 
+    args.arrival_spec = None
+    if args.arrivals:
+        from repro.serve import workload
+        try:
+            args.arrival_spec = workload.parse_arrivals(args.arrivals)
+        except (ValueError, OSError) as exc:
+            ap.error(str(exc))
+    args.slo_specs = None
+    if args.slo:
+        from repro.obs.slo import parse_slo
+        try:
+            # budgets typed in us (the wall-clock unit the driver prints)
+            args.slo_specs = parse_slo(args.slo, names, budget_scale_ns=1e3,
+                                       window_s=args.slo_window)
+        except ValueError as exc:
+            ap.error(str(exc))
+
     preps = {n: _prepare(n, train_steps=args.train_steps,
                          replicas=args.replicas, mode=args.mode)
              for n in names}
     telemetry_requested = (args.metrics_out or args.trace_out
-                           or args.drift_gate is not None)
+                           or args.drift_gate is not None
+                           or args.arrival_spec is not None
+                           or args.slo_specs is not None
+                           or args.admission_depth is not None)
     if len(names) == 1 and args.replicas == 1 and not telemetry_requested:
         _serve_single(preps[names[0]], args)
     else:

@@ -18,9 +18,18 @@ interval, the measured steady-state rate, and the bottleneck stage:
 
     PYTHONPATH=src python -m repro.launch.simulate --model deepsets-32 --pipeline-depth 4 --events 16
 
+Open-loop load — ``--arrivals`` drives each instance with a seeded
+arrival process on the cycle clock (rates are modeled-device events/sec);
+the driver then reports offered rate and sojourn (arrival-to-completion,
+queueing included) statistics next to the closed-loop latency:
+
+    PYTHONPATH=src python -m repro.launch.simulate --model deepsets-32 \\
+        --arrivals poisson:2700000 --pipeline-depth 64 --events 2000
+
 ``--tier-s`` additionally re-ranks the DSE's top-K designs by simulated
-latency (the dse.search rescore hook); ``--seed`` makes jittered runs
-reproducible.
+latency (the dse.search rescore hook); ``--seed`` makes jittered and
+open-loop runs reproducible (the same grammar and seed produce the same
+arrival times here and in ``repro.launch.serve``).
 """
 from __future__ import annotations
 
@@ -52,12 +61,23 @@ def _simulate_single(args, cfg: simrun.SimConfig) -> simrun.SimResult:
     else:
         pb = perfmodel.pipeline_stages(design.placement)
         meas = res.instances[0].steady_interval_cycles()
-        err = abs(meas - pb.interval) / pb.interval
         bres, butil = res.bottleneck()
-        print(f"[sim] pipelined (depth {cfg.pipeline_depth}): analytic II "
-              f"{aie_arch.ns(pb.interval):.1f} ns "
-              f"(bottleneck stage {pb.bottleneck.name}) vs measured steady "
-              f"interval {aie_arch.ns(meas):.1f} ns ({100 * err:.2f}% error)")
+        if cfg.open_loop:
+            # Completions pace the *arrivals* when offered rate < 1/II, so
+            # the steady interval measures utilization, not the II.
+            print(f"[sim] pipelined (depth {cfg.pipeline_depth}): analytic "
+                  f"II {aie_arch.ns(pb.interval):.1f} ns (bottleneck stage "
+                  f"{pb.bottleneck.name}); open-loop steady interval "
+                  f"{aie_arch.ns(meas):.1f} ns tracks the offered rate "
+                  f"({100 * aie_arch.ns(pb.interval) / aie_arch.ns(meas):.0f}"
+                  f"% utilization)")
+        else:
+            err = abs(meas - pb.interval) / pb.interval
+            print(f"[sim] pipelined (depth {cfg.pipeline_depth}): analytic "
+                  f"II {aie_arch.ns(pb.interval):.1f} ns "
+                  f"(bottleneck stage {pb.bottleneck.name}) vs measured "
+                  f"steady interval {aie_arch.ns(meas):.1f} ns "
+                  f"({100 * err:.2f}% error)")
         print(f"[sim] sustained {res.steady_throughput_eps() / 1e6:.3f} Meps "
               f"vs serial 1/latency {1e3 / aie_arch.ns(ana):.3f} Meps "
               f"({aie_arch.ns(ana) / aie_arch.ns(pb.interval):.2f}x from "
@@ -117,9 +137,15 @@ def main() -> None:
                     help="max in-flight events per instance (1 = serial; "
                          ">1 overlaps next ingest with current compute)")
     ap.add_argument("--seed", type=int, default=0,
-                    help="arrival-jitter RNG seed (reproducible runs)")
+                    help="arrival RNG seed (reproducible runs)")
+    ap.add_argument("--arrivals", type=str, default=None,
+                    help="arrival process: closed | poisson:<eps> | "
+                         "burst:<eps>[:<cv>] | trace:<file> — rates are "
+                         "modeled-device events/sec; open-loop sojourn "
+                         "(queueing included) is reported and exported")
     ap.add_argument("--jitter", type=float, default=0.0,
-                    help="uniform per-event arrival jitter in cycles")
+                    help="[deprecated] uniform per-event arrival jitter in "
+                         "cycles; use --arrivals instead")
     ap.add_argument("--trace", "--trace-out", dest="trace", type=str,
                     default=None,
                     help="Chrome-trace output path "
@@ -139,12 +165,38 @@ def main() -> None:
     if args.pipeline_depth < 1:
         ap.error("--pipeline-depth must be >= 1")
 
+    arrivals = None
+    if args.arrivals:
+        from repro.serve import workload
+        try:
+            arrivals = workload.parse_arrivals(args.arrivals)
+        except (ValueError, OSError) as exc:
+            ap.error(str(exc))
+        if args.jitter:
+            print("[sim] note: --jitter is deprecated and ignored when "
+                  "--arrivals is given")
+    elif args.jitter:
+        print("[sim] note: --jitter is deprecated; prefer --arrivals "
+              "(e.g. poisson:<eps>)")
+
     cfg = simrun.SimConfig(events=args.events, seed=args.seed,
-                           jitter_cycles=args.jitter,
-                           pipeline_depth=args.pipeline_depth)
+                           jitter_cycles=0.0 if arrivals else args.jitter,
+                           pipeline_depth=args.pipeline_depth,
+                           arrivals=arrivals)
     multi = bool(args.mix) or args.replicas > 1
     res = (_simulate_tenants(args, cfg) if multi
            else _simulate_single(args, cfg))
+
+    if cfg.open_loop:
+        s = res.sojourn_summary()
+        offered = sum(i.offered_eps for i in res.instances)
+        print(f"[sim] open-loop {arrivals.describe()}: offered "
+              f"{offered / 1e6:.3f} Meps across {len(res.instances)} "
+              f"instance(s)")
+        print(f"[sim] sojourn (arrival->completion, queueing included): "
+              f"mean {s['mean_ns']:.1f} ns, p50 {s['p50_ns']:.1f} ns, "
+              f"p99 {s['p99_ns']:.1f} ns, max {s['max_ns']:.1f} ns "
+              f"over {s['events']} post-warmup event(s)")
 
     if args.tier_s:
         # Independent of the packing: re-rank each involved workload's

@@ -60,6 +60,35 @@ as labels (never baked into the name):
                                      ``OverheadParams`` default)
   ``calib.sweep.points`` / ``calib.stage.drifted``  gauge {} — sweep size
                                      and count of drifting pipeline stages
+  ``load.offered`` / ``load.admitted`` / ``load.shed``  counter {tenant} —
+                                     open-loop ingress accounting at
+                                     ``FleetServer.offer``: *offered* is a
+                                     statement about demand, *admitted*
+                                     about throughput; their gap (shed) is
+                                     admission control, never silent loss
+  ``fleet.request.queue_wait_us``    histogram {tenant} — submit-to-start
+                                     wait (the queueing term of sojourn)
+  ``sim.event.sojourn_ns`` / ``sim.event.queue_wait_ns``  histogram
+                                     {instance} — open-loop DES sojourn
+                                     measured from the *intended* arrival
+  ``sim.instance.offered_eps``       gauge {instance} — offered arrival
+                                     rate realized by the DES trace
+  ``slo.requests.good`` / ``slo.requests.bad`` / ``slo.requests.shed``
+                                     counter {tenant} — per-request SLO
+                                     classification (bad = over the p99
+                                     latency budget; shed counts as bad)
+  ``slo.burn_rate``                  gauge {tenant, window} — bad fraction
+                                     over the window divided by the error
+                                     budget (1 - availability): 1.0 spends
+                                     the budget exactly at the window's
+                                     length, >1 exhausts it early
+  ``slo.error_budget.remaining``     gauge {tenant} — 1 - burn over the
+                                     full SLO window; <= 0 means exhausted
+                                     (``launch.serve --slo`` exits 1)
+  ``model.queue.sojourn_mean_ns`` / ``model.queue.sojourn_p99_ns`` —
+                                     drift family (see below): analytic
+                                     queueing model vs DES on one shared
+                                     arrival trace, CI-gated at 10%
 
 Drift-ratio semantics
 ---------------------
@@ -73,7 +102,13 @@ model. Two families are reported side by side and must not be conflated:
   * ``model.*`` metrics compare Tier-A analytic predictions against
     Tier-S simulated execution of the *same placement* — both are models
     of the VEK280, so the ratio should sit at ~1.0 and its MAPE is a
-    CI-gateable regression signal (the ``--drift-gate`` flag). The
+    CI-gateable regression signal (the ``--drift-gate`` flag).
+    ``model.queue.sojourn_{mean,p99}_ns`` extends the family to latency
+    under load: the collapsed-bottleneck queueing model (exact Lindley /
+    re-entrant recursion, :mod:`repro.core.tenancy`) and the DES are fed
+    the *same* seeded arrival trace, so the comparison cancels Monte
+    Carlo noise and gates structural drift only (keys
+    ``{model}@rho{util}``, ``benchmarks/latency_under_load.py``). The
     per-stage sub-family ``model.stage.{shim|comp|comm}`` (keys
     ``{design}/{stage}``, written by ``repro.core.calibrate``) localizes a
     total-latency drift to the pipeline stage that moved; map the stage
@@ -90,9 +125,13 @@ from __future__ import annotations
 
 from .drift import DriftEntry, DriftMonitor
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry, P2Quantile
+from .slo import (BurnAlert, BurnWindow, SLOReport, SLOSpec, SLOTracker,
+                  parse_slo)
 from .tracing import DEFAULT_PIDS, Tracer
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "P2Quantile",
     "Tracer", "DEFAULT_PIDS", "DriftMonitor", "DriftEntry",
+    "SLOSpec", "SLOTracker", "SLOReport", "BurnWindow", "BurnAlert",
+    "parse_slo",
 ]

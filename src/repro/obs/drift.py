@@ -116,11 +116,27 @@ class DriftMonitor:
                 and e.ape is not None and e.ape > threshold]
         return sorted(hits, key=lambda e: -(e.ape or 0.0))
 
-    def summary(self) -> dict:
-        """fig9-style report: per-metric MAPE + per-entry ratios."""
+    def summary(self, *, flag_threshold: float = 0.10) -> dict:
+        """fig9-style report: per-metric MAPE + per-entry ratios.
+
+        Each per-metric dict additionally carries ``flagged`` — the keys
+        whose individual drift exceeds ``flag_threshold`` (worst first) —
+        and, for ``model.stage.*`` metrics, ``suspects``: the overhead
+        constants :data:`repro.core.calibrate.STAGE_SUSPECTS` prices into
+        that stage class, i.e. the :meth:`localize` output a gate failure
+        should print instead of a bare MAPE.
+        """
         per_metric: Dict[str, dict] = {}
         for m in self.metrics():
-            per_metric[m] = {
+            flagged = sorted(self.flagged(flag_threshold, m),
+                             key=lambda e: -(e.ape or 0.0))
+            d: Dict[str, object] = {
                 "mape": self.mape(m),
-                "entries": {e.key: e.as_dict() for e in self.entries(m)}}
+                "entries": {e.key: e.as_dict() for e in self.entries(m)},
+                "flagged": [e.key for e in flagged]}
+            if flagged and m.startswith("model.stage."):
+                from repro.core.calibrate import STAGE_SUSPECTS
+                stage = m[len("model.stage."):]
+                d["suspects"] = list(STAGE_SUSPECTS.get(stage, ()))
+            per_metric[m] = d
         return per_metric

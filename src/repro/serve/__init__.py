@@ -81,11 +81,19 @@ class _Request:
     event: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: Optional[np.ndarray] = None
     t_done: Optional[float] = None
+    t_start: Optional[float] = None
+    """When the serving batch holding this request began executing; the gap
+    from ``t_submit`` is the queue wait (collection window + backlog)."""
 
     @property
     def latency_us(self) -> float:
         return ((self.t_done - self.t_submit) * 1e6
                 if self.t_done is not None else 0.0)
+
+    @property
+    def queue_wait_us(self) -> float:
+        return ((self.t_start - self.t_submit) * 1e6
+                if self.t_start is not None else 0.0)
 
 
 class JetServer:
@@ -178,6 +186,9 @@ class JetServer:
             batch = self._collect()
             if not batch:
                 continue
+            t_start = time.perf_counter()
+            for r in batch:
+                r.t_start = t_start
             xs = jnp.asarray(np.stack([r.x for r in batch]))
             out = np.asarray(self._fn(xs))
             t_done = time.perf_counter()

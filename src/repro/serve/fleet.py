@@ -41,6 +41,7 @@ import numpy as np
 from repro.core import aie_arch, dse, tenancy
 from repro.core.layerspec import ModelSpec
 from repro.obs import DriftMonitor, MetricsRegistry, Tracer
+from repro.obs.slo import SLOReport, SLOSpec, SLOTracker
 from repro.quant import QuantizedMLP
 from repro.serve import JetServer, ServeStats, _Request
 
@@ -109,7 +110,9 @@ class FleetServer:
                  window_us: float = 200.0,
                  interpret: bool = True,
                  registry: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 slos: Optional[Dict[str, SLOSpec]] = None,
+                 admission_depth: Optional[int] = None):
         if policy not in ("rr", "least_loaded"):
             raise ValueError(f"unknown dispatch policy {policy!r}")
         if not tenants:
@@ -118,6 +121,16 @@ class FleetServer:
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = tracer
         self.drift = DriftMonitor()
+        #: offered events above this per-replica queue depth are shed by
+        #: :meth:`offer` (None = admit everything, the pre-SLO behavior)
+        self.admission_depth = admission_depth
+        self.slo_trackers: Dict[str, SLOTracker] = {}
+        for name, spec in (slos or {}).items():
+            if spec.tenant != name:
+                raise ValueError(f"SLO key {name!r} names tenant "
+                                 f"{spec.tenant!r}")
+            self.slo_trackers[name] = SLOTracker(spec,
+                                                 registry=self.registry)
         self.tenants: Dict[str, TenantSpec] = {}
         self._servers: Dict[str, List[JetServer]] = {}
         self._dispatched: Dict[str, List[int]] = {}
@@ -131,6 +144,9 @@ class FleetServer:
         self._m_tput: Dict[str, object] = {}
         self._m_dispatched: Dict[str, List[object]] = {}
         self._m_depth: Dict[str, List[object]] = {}
+        self._m_offered: Dict[str, object] = {}
+        self._m_admitted: Dict[str, object] = {}
+        self._m_shed: Dict[str, object] = {}
         # Validate every spec BEFORE building any JetServer: each server
         # starts a worker thread, and a mid-construction raise would leak
         # threads with no handle left to close() them.
@@ -141,6 +157,9 @@ class FleetServer:
             if t.replicas < 1:
                 raise ValueError(f"tenant {t.name!r}: replicas must be >= 1")
             seen.add(t.name)
+        for name in self.slo_trackers:
+            if name not in seen:
+                raise ValueError(f"SLO for unknown tenant {name!r}")
         for t in tenants:
             self.tenants[t.name] = t
             servers = [
@@ -166,6 +185,12 @@ class FleetServer:
                 reg.gauge("fleet.replica.queue_depth",
                           {"tenant": t.name, "replica": str(i)})
                 for i in range(t.replicas)]
+            self._m_offered[t.name] = reg.counter("load.offered",
+                                                  {"tenant": t.name})
+            self._m_admitted[t.name] = reg.counter("load.admitted",
+                                                   {"tenant": t.name})
+            self._m_shed[t.name] = reg.counter("load.shed",
+                                               {"tenant": t.name})
             for i, s in enumerate(servers):
                 s.on_done = self._replica_observer(t.name, i, s)
 
@@ -180,16 +205,22 @@ class FleetServer:
         """
         lat = self.registry.histogram("fleet.request.latency_us",
                                       {"tenant": tenant})
+        wait = self.registry.histogram("fleet.request.queue_wait_us",
+                                       {"tenant": tenant})
         done = self.registry.counter("fleet.replica.completed",
                                      {"tenant": tenant, "replica": str(i)})
         depth = self._m_depth[tenant][i]
         key = f"{tenant}#{i}"
+        slo = self.slo_trackers.get(tenant)
 
         def observe(req: _Request) -> None:
             lat.record(req.latency_us)
+            wait.record(req.queue_wait_us)
             done.inc()
             depth.set(float(server._q.qsize()))
             self.drift.observe(key, "serve.latency_us", req.latency_us)
+            if slo is not None:
+                slo.record(req.latency_us * 1e3)
 
         return observe
 
@@ -223,6 +254,40 @@ class FleetServer:
         if not req.event.wait(timeout):
             raise TimeoutError("fleet inference timed out")
         return req.result
+
+    def offer(self, x: np.ndarray,
+              tenant: Optional[str] = None) -> Optional[_Request]:
+        """Admission-controlled submit: the open-loop ingress of the fleet.
+
+        Counts the event as *offered*; sheds it (returns None, counting it
+        against the tenant's error budget) when every replica's queue sits
+        at or above ``admission_depth``, otherwise admits it via
+        :meth:`submit`. With ``admission_depth=None`` nothing is ever shed
+        and offered == admitted — the offered/admitted/shed split is what
+        separates the measured serving rate (a *throughput* statement)
+        from the offered rate (a *load* statement) in the `load.*` family.
+        """
+        name = tenant or self._default
+        if name not in self._servers:
+            raise KeyError(f"unknown tenant {name!r}")
+        self._m_offered[name].inc()
+        if self.admission_depth is not None:
+            depth = min(s._q.qsize() for s in self._servers[name])
+            if depth >= self.admission_depth:
+                self._m_shed[name].inc()
+                slo = self.slo_trackers.get(name)
+                if slo is not None:
+                    slo.record_shed()
+                return None
+        self._m_admitted[name].inc()
+        return self.submit(x, name)
+
+    def slo_snapshot(self, now: Optional[float] = None) -> SLOReport:
+        """Cross-tenant SLO roll-up (error budgets, burn rates, alerts)."""
+        return SLOReport.from_trackers(self.slo_trackers, now=now,
+                                       meta={"policy": self.policy,
+                                             "admission_depth":
+                                                 self.admission_depth})
 
     # -- micro-batched dispatch ----------------------------------------------
     def submit_batch(self, xs: Sequence[np.ndarray],
@@ -539,4 +604,6 @@ class FleetServer:
             snap["drift"] = self.drift_snapshot(tier_s=tier_s).summary()
         snap["metrics"] = self.registry.snapshot()
         snap["serve"] = self.summary()
+        if self.slo_trackers:
+            snap["slo"] = self.slo_snapshot().as_dict()
         return snap

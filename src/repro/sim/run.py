@@ -60,10 +60,24 @@ class SimConfig:
     shim_streams_per_col: int = aie_arch.SHIM_STREAMS_PER_COL
     include_plio: bool = True
     ideal: bool = False            #: zero all calibrated overheads
-    seed: Optional[int] = None     #: seeds the arrival-jitter RNG
+    seed: Optional[int] = None     #: seeds the arrival RNG (jitter + open loop)
     jitter_cycles: float = 0.0     #: uniform [0, jitter) per-event arrival jitter
+    arrivals: Optional[object] = None
+    """Open-loop arrival process: a :class:`repro.serve.workload.ArrivalSpec`
+    (lazy-imported — the sim stays jax-free when arrivals are unused). When
+    set and open-loop, every event gets an *intended* arrival time on the
+    cycle clock, drawn per instance from the shared seeded RNG; admission
+    still respects ``pipeline_depth``, but sojourn is measured from the
+    intended arrival, so a bounded depth only moves waiting to the
+    admission gate without hiding it. Rates in the spec are events/sec of
+    modeled device time. Overrides ``jitter_cycles``."""
     trace: bool = True             #: record a Chrome trace
     max_events: int = 5_000_000    #: engine event budget (runaway guard)
+
+    @property
+    def open_loop(self) -> bool:
+        return (self.arrivals is not None
+                and getattr(self.arrivals, "open_loop", False))
 
 
 @dataclasses.dataclass
@@ -76,6 +90,8 @@ class InstanceSim:
     placement: Placement
     event_tasks: List[Dict[str, object]]
     latencies: List[float] = dataclasses.field(default_factory=list)
+    arrivals: List[float] = dataclasses.field(default_factory=list)
+    """Intended (open-loop) arrival cycles per event; empty when closed."""
 
     @property
     def mean_latency_cycles(self) -> float:
@@ -125,6 +141,42 @@ class InstanceSim:
         """Steady-state events/sec (reciprocal of the sustained interval)."""
         return 1e9 / aie_arch.ns(
             self.steady_interval_cycles(warmup=warmup, drain=drain))
+
+    @property
+    def sojourn_cycles(self) -> List[float]:
+        """Intended-arrival-to-completion time per event.
+
+        Open-loop runs measure from the *intended* arrival (the offered
+        clock), so admission-gate waiting counts as sojourn; closed-loop
+        runs have no offered clock and fall back to the dataflow latency.
+        """
+        if not self.arrivals:
+            return list(self.latencies)
+        return [rec["done"].end - a
+                for rec, a in zip(self.event_tasks, self.arrivals)]
+
+    def queue_wait_cycles(self, base: Optional[float] = None) -> List[float]:
+        """Per-event queueing wait: sojourn minus the dataflow latency.
+
+        ``base`` defaults to the minimum observed latency — an event that
+        hit an empty queue, which in a single-tenant run equals the
+        analytic congestion-free latency exactly.
+        """
+        if not self.latencies:
+            return []
+        b = base if base is not None else min(self.latencies)
+        return [max(0.0, s - b) for s in self.sojourn_cycles]
+
+    @property
+    def offered_eps(self) -> float:
+        """Offered rate over the intended-arrival span (0 when closed)."""
+        if len(self.arrivals) < 2:
+            return 0.0
+        span = self.arrivals[-1] - self.arrivals[0]
+        if span <= 0:
+            return 0.0
+        return (len(self.arrivals) - 1) / (span * aie_arch.NS_PER_CYCLE
+                                           * 1e-9)
 
 
 @dataclasses.dataclass
@@ -179,6 +231,32 @@ class SimResult:
 
     def per_instance_eps(self) -> Dict[str, float]:
         return {i.label: i.events_per_sec for i in self.instances}
+
+    def sojourn_summary(self, *, warmup_frac: float = 0.1) -> Dict[str, float]:
+        """Merged open-loop sojourn statistics (ns) across instances.
+
+        The first ``warmup_frac`` of each instance's events is discarded —
+        an open-loop queue starts empty, so the head of the run
+        under-samples waiting relative to the stationary regime the
+        analytic M/D/1 model (:func:`repro.core.tenancy.latency_under_load`)
+        predicts.
+        """
+        sojourns: List[float] = []
+        for inst in self.instances:
+            s = inst.sojourn_cycles
+            sojourns.extend(s[int(len(s) * warmup_frac):])
+        if not sojourns:
+            return {"events": 0}
+        sojourns.sort()
+
+        def pct(q: float) -> float:
+            return sojourns[min(len(sojourns) - 1,
+                                int(q * len(sojourns)))]
+        return {"events": len(sojourns),
+                "mean_ns": aie_arch.ns(sum(sojourns) / len(sojourns)),
+                "p50_ns": aie_arch.ns(pct(0.50)),
+                "p99_ns": aie_arch.ns(pct(0.99)),
+                "max_ns": aie_arch.ns(sojourns[-1])}
 
     def shim_wait_cycles(self) -> float:
         """Total cycles transfers spent queued behind other tenants."""
@@ -284,6 +362,17 @@ class SimResult:
                       ).set(aie_arch.ns(inst.steady_interval_cycles()))
             reg.counter("sim.events.completed",
                         {"instance": inst.label}).inc(len(inst.latencies))
+            if inst.arrivals:
+                hs = reg.histogram("sim.event.sojourn_ns",
+                                   {"instance": inst.label})
+                hw = reg.histogram("sim.event.queue_wait_ns",
+                                   {"instance": inst.label})
+                for s, w in zip(inst.sojourn_cycles,
+                                inst.queue_wait_cycles()):
+                    hs.record(aie_arch.ns(s))
+                    hw.record(aie_arch.ns(w))
+                reg.gauge("sim.instance.offered_eps",
+                          {"instance": inst.label}).set(inst.offered_eps)
         reg.gauge("sim.engine.events_run").set(self.graph.sim.events_run)
         reg.gauge("sim.makespan_ns").set(aie_arch.ns(end))
         reg.gauge("sim.throughput.steady_eps").set(self.steady_throughput_eps())
@@ -313,13 +402,29 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
     out_bytes = maps[-1].layer.out_bytes
 
     depth = max(1, cfg.pipeline_depth)
+    arrival_cycles: Optional[List[float]] = None
+    if cfg.open_loop:
+        # Lazy import keeps the simulator jax-free unless arrivals are
+        # actually configured (repro.serve's package import pulls jax).
+        from repro.serve import workload
+        arrival_cycles = workload.arrival_cycles(cfg.arrivals, n_events,
+                                                 rng=rng)
     roots: List[Task] = []
     dones: List[Task] = []
     ev_tasks: List[Dict[str, object]] = []
     for e in range(n_events):
         ev = f"{label}.e{e}"
-        jit = rng.uniform(0.0, cfg.jitter_cycles) if cfg.jitter_cycles > 0 else 0.0
-        root = g.task(f"{ev}.arrive", delay=jit, record=False)
+        if arrival_cycles is not None:
+            # Open loop: the offered clock fires at the intended arrival
+            # regardless of queue state; admission (below) may hold the
+            # event at the gate, and sojourn is measured from this clock.
+            offered = g.task(f"{ev}.offered", delay=arrival_cycles[e],
+                             record=False)
+            root = g.task(f"{ev}.arrive", record=False).after(offered)
+        else:
+            jit = (rng.uniform(0.0, cfg.jitter_cycles)
+                   if cfg.jitter_cycles > 0 else 0.0)
+            root = g.task(f"{ev}.arrive", delay=jit, record=False)
         # Pipelined admission: at most ``depth`` events in flight. Event e
         # waits for event e-depth to complete (depth 1 = the strictly
         # serial pre-pipelining graph, where e waits on e-1's egress) and,
@@ -328,7 +433,7 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
         # is preserved.
         if e >= depth:
             root.after(dones[e - depth])
-        if e > 0 and depth > 1:
+        if e > 0 and (depth > 1 or arrival_cycles is not None):
             root.after(roots[e - 1])
         roots.append(root)
         rec: Dict[str, object] = {"root": root, "ingest": [], "edges": [],
@@ -377,7 +482,8 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
         dones.append(cur)
         ev_tasks.append(rec)
     return InstanceSim(label=label, tenant=tenant, replica=replica,
-                       placement=placement, event_tasks=ev_tasks)
+                       placement=placement, event_tasks=ev_tasks,
+                       arrivals=list(arrival_cycles or []))
 
 
 def _finalize(g: TaskGraph, arr: ArrayResources, insts: List[InstanceSim],

@@ -298,3 +298,107 @@ class TestFleetTelemetry:
         assert drift["model.latency_ns"]["mape"] < 0.05
         _json.dumps(snap)   # whole bundle must be JSON-serializable
         assert fleet.drift.flagged(10.0, "serve.latency_us")
+
+
+class TestLoadAndSLO:
+    """Open-loop ingress: offer/shed accounting, SLO trackers, and the
+    workload driver against a real (ref-mode) fleet."""
+
+    def test_offer_admits_all_without_depth(self, qmlp):
+        q, jc = qmlp
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=2)])
+        try:
+            xs = _events(jc, 8, q.e_in)
+            reqs = [fleet.offer(xs[i]) for i in range(8)]
+            assert all(r is not None for r in reqs)
+            for r in reqs:
+                assert r.event.wait(timeout=30)
+            reg = fleet.registry
+            assert reg.find("load.offered", {"tenant": "m"}).value == 8
+            assert reg.find("load.admitted", {"tenant": "m"}).value == 8
+            assert reg.find("load.shed", {"tenant": "m"}).value == 0
+            with pytest.raises(KeyError):
+                fleet.offer(xs[0], tenant="ghost")
+        finally:
+            fleet.close()
+
+    def test_offer_sheds_at_admission_depth(self, qmlp):
+        q, jc = qmlp
+        from repro.obs.slo import SLOSpec
+        slo = SLOSpec(tenant="m", p99_latency_budget_ns=1e6,
+                      availability=0.9, window_s=60.0)
+        # depth 0: every replica queue is always "full" -> shed everything
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=1)],
+                            slos={"m": slo}, admission_depth=0)
+        try:
+            xs = _events(jc, 5, q.e_in)
+            assert all(fleet.offer(xs[i]) is None for i in range(5))
+            reg = fleet.registry
+            assert reg.find("load.offered", {"tenant": "m"}).value == 5
+            assert reg.find("load.admitted", {"tenant": "m"}).value == 0
+            assert reg.find("load.shed", {"tenant": "m"}).value == 5
+            tr = fleet.slo_trackers["m"]
+            assert tr.shed == 5
+            rep = fleet.slo_snapshot()
+            assert rep.tenants["m"]["shed"] == 5
+            assert rep.meta["admission_depth"] == 0
+        finally:
+            fleet.close()
+
+    def test_slo_validation_at_construction(self, qmlp):
+        q, _ = qmlp
+        from repro.obs.slo import SLOSpec
+        spec = SLOSpec(tenant="ghost", p99_latency_budget_ns=1e6,
+                       availability=0.99, window_s=60.0)
+        with pytest.raises(ValueError, match="unknown tenant"):
+            FleetServer([TenantSpec(name="m", qmlp=q, mode="ref")],
+                        slos={"ghost": spec})
+        with pytest.raises(ValueError, match="names tenant"):
+            FleetServer([TenantSpec(name="m", qmlp=q, mode="ref")],
+                        slos={"m": spec})
+
+    def test_completion_feeds_slo_and_queue_wait(self, qmlp):
+        q, jc = qmlp
+        from repro.obs.slo import SLOSpec
+        slo = SLOSpec(tenant="m", p99_latency_budget_ns=1e12,
+                      availability=0.9, window_s=60.0)
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=2)], slos={"m": slo})
+        try:
+            xs = _events(jc, 10, q.e_in)
+            reqs = [fleet.offer(xs[i]) for i in range(10)]
+            for r in reqs:
+                assert r.event.wait(timeout=30)
+            # generous 1 ms p99 budget in ns -> every request is good
+            tr = fleet.slo_trackers["m"]
+            assert tr.good == 10 and tr.bad == 0
+            wait = fleet.registry.find("fleet.request.queue_wait_us",
+                                       {"tenant": "m"})
+            assert wait is not None and wait.count == 10
+            assert wait.min >= 0.0
+            snap = fleet.telemetry_snapshot(drift=False)
+            assert snap["slo"]["tenants"]["m"]["good"] == 10
+            assert snap["slo"]["ok"] is True
+        finally:
+            fleet.close()
+
+    def test_workload_drive_on_real_fleet(self, qmlp):
+        q, jc = qmlp
+        from repro.serve import workload
+        fleet = FleetServer([TenantSpec(name="m", qmlp=q, mode="ref",
+                                        replicas=2)])
+        try:
+            xs = _events(jc, 16, q.e_in)
+            dr = workload.drive(fleet, list(xs), workload.poisson(2000.0),
+                                tenant="m", seed=1)
+            assert dr.offered == 16
+            assert dr.admitted == 16 and dr.shed == 0
+            assert dr.admitted_idx == list(range(16))
+            for r in dr.requests:
+                assert r.event.wait(timeout=30)
+            assert dr.offered_eps > 0
+            assert dr.wall_s > 0
+        finally:
+            fleet.close()

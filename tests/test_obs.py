@@ -286,3 +286,86 @@ class TestSimTelemetry:
                  if e["ph"] == "M" and e["name"] == "process_name"}
         assert "tiles" in lanes and "fleet" in lanes
         assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in tr.spans())
+
+
+class TestHeavyTailedLoad:
+    """obs.metrics under bursty, high-CV open-loop streams: the quantile
+    estimators and exporters backing the ``slo.*``/``load.*`` families."""
+
+    def _bursty_gaps(self, cv, n=20_000, seed=9):
+        from repro.serve import workload
+        ts = workload.arrival_times(workload.burst(1e6, cv), n + 1,
+                                    seed=seed)
+        return np.diff(np.asarray(ts)) * 1e9        # inter-arrival gaps, ns
+
+    @pytest.mark.parametrize("cv", [2.0, 4.0])
+    def test_p2_quantiles_on_bursty_stream(self, cv):
+        xs = self._bursty_gaps(cv)
+        for p in (0.5, 0.9, 0.99):
+            est = P2Quantile(p)
+            for x in xs:
+                est.observe(float(x))
+            exact = float(np.percentile(xs, 100 * p))
+            assert abs(est.value - exact) / exact < 0.05, (cv, p)
+
+    def test_histogram_merge_on_bursty_shards(self):
+        """Per-replica histograms merged into a fleet view must preserve
+        counts, sum, and tail quantiles on a high-CV stream."""
+        xs = self._bursty_gaps(4.0)
+        shards = [Histogram("w", ()) for _ in range(4)]
+        for i, x in enumerate(xs):
+            shards[i % 4].record(float(x))
+        total = Histogram("w", ())
+        for s in shards:
+            total.merge(s)
+        assert total.count == xs.size
+        assert total.sum == pytest.approx(xs.sum())
+        assert total.max == pytest.approx(xs.max())
+        exact_p99 = float(np.percentile(xs, 99))
+        # merge falls back to bucket interpolation -> coarser than P²
+        assert abs(total.quantile(0.99) - exact_p99) / exact_p99 < 0.25
+
+    def test_slo_and_load_families_round_trip(self, tmp_path):
+        """slo.* / load.* / model.queue.* metrics survive JSON and
+        Prometheus export intact."""
+        from repro.obs.slo import SLOSpec, SLOTracker
+        reg = MetricsRegistry()
+        tr = SLOTracker(SLOSpec(tenant="a", p99_latency_budget_ns=1000.0,
+                                availability=0.99, window_s=60.0),
+                        registry=reg)
+        for i in range(20):
+            tr.record(2000.0 if i % 4 == 0 else 100.0, t=i * 0.1)
+        tr.snapshot(now=2.0)
+        reg.counter("load.offered", {"tenant": "a"}).inc(25)
+        reg.counter("load.admitted", {"tenant": "a"}).inc(20)
+        reg.counter("load.shed", {"tenant": "a"}).inc(5)
+        reg.gauge("model.queue.sojourn_p99_ns", {"model": "m"}).set(1234.5)
+        snap = json.loads(reg.to_json())
+        counters = {(c["name"], c["labels"].get("tenant")): c["value"]
+                    for c in snap["counters"]}
+        assert counters[("slo.requests.good", "a")] == 15
+        assert counters[("slo.requests.bad", "a")] == 5
+        assert counters[("load.offered", "a")] == 25
+        assert counters[("load.shed", "a")] == 5
+        gauges = {g["name"]: g["value"] for g in snap["gauges"]}
+        assert gauges["model.queue.sojourn_p99_ns"] == 1234.5
+        assert "slo.error_budget.remaining" in gauges
+        text = reg.to_prometheus()
+        assert 'load_offered{tenant="a"} 25' in text
+        assert 'slo_requests_bad{tenant="a"} 5' in text
+        assert 'model_queue_sojourn_p99_ns{model="m"} 1234.5' in text
+
+    def test_drift_summary_carries_flagged_and_suspects(self):
+        mon = DriftMonitor()
+        mon.expect("k1", "model.queue.sojourn_p99_ns", 100.0)
+        mon.observe("k1", "model.queue.sojourn_p99_ns", 200.0)
+        mon.expect("k2", "model.queue.sojourn_p99_ns", 100.0)
+        mon.observe("k2", "model.queue.sojourn_p99_ns", 101.0)
+        s = mon.summary(flag_threshold=0.10)
+        d = s["model.queue.sojourn_p99_ns"]
+        assert d["flagged"] == ["k1"]
+        mon.expect("a#0", "model.stage.shim", 100.0)
+        mon.observe("a#0", "model.stage.shim", 300.0)
+        s2 = mon.summary(flag_threshold=0.10)
+        assert s2["model.stage.shim"]["suspects"], \
+            "flagged stage metric must name suspect constants"

@@ -1,0 +1,170 @@
+"""SLO accounting (repro.obs.slo): spec parsing, error budgets, burn-rate
+alerts on deterministic synthetic traces, and the exit-gating report."""
+import json
+
+import pytest
+
+from repro.obs import MetricsRegistry
+from repro.obs.slo import (BurnWindow, SLOReport, SLOSpec, SLOTracker,
+                           default_burn_windows, parse_slo)
+
+
+def _spec(**kw):
+    base = dict(tenant="t", p99_latency_budget_ns=1000.0,
+                availability=0.99, window_s=60.0)
+    base.update(kw)
+    return SLOSpec(**base)
+
+
+class TestSpecAndParse:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            _spec(p99_latency_budget_ns=0.0)
+        with pytest.raises(ValueError):
+            _spec(availability=1.0)
+        with pytest.raises(ValueError):
+            _spec(availability=0.0)
+        with pytest.raises(ValueError):
+            _spec(window_s=-1.0)
+        assert _spec(availability=0.95).error_budget == pytest.approx(0.05)
+
+    def test_parse_every_tenant_and_overrides(self):
+        specs = parse_slo("500:0.95,b=900:0.999", ["a", "b"],
+                          budget_scale_ns=1e3)
+        assert specs["a"].p99_latency_budget_ns == 500e3
+        assert specs["a"].availability == 0.95
+        assert specs["b"].p99_latency_budget_ns == 900e3
+        assert specs["b"].availability == 0.999
+
+    def test_parse_default_availability_and_scale(self):
+        specs = parse_slo("2000", ["x"], budget_scale_ns=1.0)
+        assert specs["x"].p99_latency_budget_ns == 2000.0
+        assert specs["x"].availability == 0.99
+
+    def test_parse_rejects_bad_input(self):
+        with pytest.raises(ValueError):
+            parse_slo("nope=100", ["a"])
+        with pytest.raises(ValueError):
+            parse_slo("a=abc", ["a"])
+        with pytest.raises(ValueError):
+            parse_slo(",", ["a"])
+
+    def test_default_ladder_rescales(self):
+        ws = default_burn_windows(120.0)
+        assert [w.severity for w in ws] == ["page", "page", "ticket"]
+        assert ws[0].long_s == pytest.approx(10.0)
+        assert ws[0].short_s == pytest.approx(2.0)
+        assert ws[2].long_s == pytest.approx(120.0)
+
+
+class TestTracker:
+    def test_good_bad_classification(self):
+        tr = SLOTracker(_spec())
+        assert tr.record(500.0, t=1.0) is True
+        assert tr.record(1500.0, t=2.0) is False
+        tr.record_shed(t=3.0)
+        assert (tr.good, tr.bad, tr.shed) == (1, 2, 1)
+
+    def test_burn_rate_semantics(self):
+        # availability 0.9 -> budget 0.1; a 20% bad stream burns at 2x
+        tr = SLOTracker(_spec(availability=0.9))
+        for i in range(100):
+            t = 0.1 + i * 0.1
+            tr.record(2000.0 if i % 5 == 0 else 10.0, t=t)
+        now = 0.1 + 99 * 0.1
+        assert tr.bad_fraction(60.0, now) == pytest.approx(0.2)
+        assert tr.burn_rate(60.0, now) == pytest.approx(2.0)
+        assert tr.error_budget_remaining(now) == pytest.approx(-1.0)
+        assert tr.exhausted(now)
+
+    def test_all_good_stream_keeps_budget(self):
+        tr = SLOTracker(_spec())
+        for i in range(200):
+            tr.record(10.0, t=i * 0.01)
+        assert tr.burn_rate(60.0, 2.0) == 0.0
+        assert tr.error_budget_remaining(2.0) == pytest.approx(1.0)
+        assert not tr.exhausted(2.0)
+        assert tr.alerts(2.0) == []
+
+    def test_burn_alerts_fire_deterministically(self):
+        """A synthetic budget-exhausting trace must fire the fast-burn page:
+        every event misses the budget -> burn rate 1/0.01 = 100x on every
+        window, far above the 14.4x page threshold."""
+        tr = SLOTracker(_spec())     # availability .99, window 60 s
+        for i in range(600):
+            tr.record(5000.0, t=i * 0.1)    # all bad, spanning 60 s
+        alerts = tr.alerts(59.9)
+        assert alerts, "exhausting trace must fire alerts"
+        sev = {a.severity for a in alerts}
+        assert "page" in sev and "ticket" in sev
+        assert len(alerts) == 3              # whole ladder fires
+        for a in alerts:
+            assert a.burn_long >= a.threshold
+            assert a.burn_short >= a.threshold
+            assert a.tenant == "t"
+        # determinism: replaying the identical stream gives identical alerts
+        tr2 = SLOTracker(_spec())
+        for i in range(600):
+            tr2.record(5000.0, t=i * 0.1)
+        assert [a.as_dict() for a in tr2.alerts(59.9)] == \
+            [a.as_dict() for a in alerts]
+
+    def test_multi_window_gate_needs_both(self):
+        """Bad events only in the distant past: the long window still sees
+        them but the short window is clean -> no page."""
+        w = BurnWindow(long_s=40.0, short_s=4.0, threshold=2.0,
+                       severity="page")
+        tr = SLOTracker(_spec(availability=0.9), burn_windows=[w],
+                        bucket_s=1.0)
+        for i in range(20):
+            tr.record(5000.0, t=float(i))      # bad burst at t=0..19
+        for i in range(20, 40):
+            tr.record(10.0, t=float(i))        # clean recovery
+        assert tr.burn_rate(40.0, 39.0) > 2.0  # long window still burning
+        assert tr.burn_rate(4.0, 39.0) == 0.0  # short window recovered
+        assert tr.alerts(39.0) == []           # -> alert has reset
+
+    def test_shed_counts_against_budget(self):
+        tr = SLOTracker(_spec(availability=0.5))
+        for i in range(10):
+            tr.record_shed(t=float(i))
+        assert tr.bad_fraction(60.0, 9.0) == 1.0
+        assert tr.exhausted(9.0)
+
+    def test_snapshot_emits_metrics(self):
+        reg = MetricsRegistry()
+        tr = SLOTracker(_spec(), registry=reg)
+        tr.record(10.0, t=1.0)
+        tr.record(5000.0, t=2.0)
+        snap = tr.snapshot(now=2.0)
+        assert snap["good"] == 1 and snap["bad"] == 1
+        assert reg.find("slo.requests.good", {"tenant": "t"}).value == 1
+        assert reg.find("slo.requests.bad", {"tenant": "t"}).value == 1
+        assert reg.find("slo.error_budget.remaining",
+                        {"tenant": "t"}) is not None
+        json.dumps(snap)    # must be JSON-serializable
+
+
+class TestReport:
+    def _tracker(self, tenant, bad):
+        tr = SLOTracker(_spec(tenant=tenant, availability=0.9))
+        for i in range(50):
+            late = bad and i % 2 == 0          # 50% bad -> 5x burn
+            tr.record(5000.0 if late else 10.0, t=i * 0.1)
+        return tr
+
+    def test_exit_gate(self, tmp_path):
+        good = self._tracker("ok", bad=False)
+        burn = self._tracker("hot", bad=True)
+        rep = SLOReport.from_trackers({"ok": good, "hot": burn}, now=4.9)
+        assert rep.exhausted_tenants == ["hot"]
+        assert not rep.ok
+        assert rep.exit_code() == 1
+        rep_ok = SLOReport.from_trackers({"ok": good}, now=4.9)
+        assert rep_ok.ok and rep_ok.exit_code() == 0
+        p = tmp_path / "slo.json"
+        rep.save(str(p))
+        on_disk = json.loads(p.read_text())
+        assert on_disk["ok"] is False
+        assert on_disk["exhausted"] == ["hot"]
+        assert on_disk["tenants"]["hot"]["exhausted"] is True

@@ -1,0 +1,156 @@
+"""Open-loop arrival generators (repro.serve.workload): spec grammar,
+determinism, target CV, trace replay, and the fleet drive loop."""
+import math
+
+import pytest
+
+from repro.core import aie_arch
+from repro.serve import workload
+
+
+class TestSpecGrammar:
+    def test_parse_forms(self):
+        assert workload.parse_arrivals("closed").kind == "closed"
+        p = workload.parse_arrivals("poisson:2.5e6")
+        assert p.kind == "poisson" and p.rate_eps == 2.5e6
+        b = workload.parse_arrivals("burst:1e6:3.0")
+        assert b.kind == "burst" and b.rate_eps == 1e6 and b.cv == 3.0
+        # burst CV defaults to 2.0
+        assert workload.parse_arrivals("burst:1e6").cv == 2.0
+
+    def test_parse_trace_file(self, tmp_path):
+        p = tmp_path / "arrivals.txt"
+        p.write_text("0.0\n1e-6\n3e-6\n")
+        spec = workload.parse_arrivals(f"trace:{p}")
+        assert spec.kind == "trace"
+        assert spec.timestamps == (0.0, 1e-6, 3e-6)
+
+    def test_parse_trace_json(self, tmp_path):
+        p = tmp_path / "arrivals.json"
+        p.write_text("[0.0, 2e-6, 5e-6]")
+        spec = workload.parse_arrivals(f"trace:{p}")
+        assert spec.timestamps == (0.0, 2e-6, 5e-6)
+
+    def test_parse_rejects_garbage(self):
+        for bad in ("", "poisson", "poisson:-1", "poisson:x",
+                    "burst:1e6:0", "nope:1", "trace:"):
+            with pytest.raises(ValueError):
+                workload.parse_arrivals(bad)
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            workload.poisson(0.0)
+        with pytest.raises(ValueError):
+            workload.burst(1e6, -1.0)
+        with pytest.raises(ValueError):
+            workload.trace([2.0, 1.0])      # not ascending
+        with pytest.raises(ValueError):
+            workload.trace([])
+        assert not workload.closed().open_loop
+        assert workload.poisson(1e6).open_loop
+
+    def test_describe_and_as_dict(self):
+        spec = workload.burst(1e6, 4.0)
+        assert "CV 4" in spec.describe()
+        d = spec.as_dict()
+        assert d["kind"] == "burst" and d["cv"] == 4.0
+
+
+class TestGenerators:
+    def test_deterministic_under_seed(self):
+        spec = workload.poisson(1e6)
+        a = workload.arrival_times(spec, 100, seed=42)
+        b = workload.arrival_times(spec, 100, seed=42)
+        c = workload.arrival_times(spec, 100, seed=43)
+        assert a == b
+        assert a != c
+
+    def test_ascending_from_zero(self):
+        for spec in (workload.poisson(1e6), workload.burst(1e6, 3.0),
+                     workload.burst(1e6, 0.5)):
+            ts = workload.arrival_times(spec, 500, seed=1)
+            assert len(ts) == 500
+            assert ts[0] >= 0.0
+            assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+    def test_poisson_rate_and_cv(self):
+        ts = workload.arrival_times(workload.poisson(1e6), 20_000, seed=7)
+        gaps = [b - a for a, b in zip(ts, ts[1:])]
+        mean = sum(gaps) / len(gaps)
+        assert mean == pytest.approx(1e-6, rel=0.05)
+        var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+        assert math.sqrt(var) / mean == pytest.approx(1.0, abs=0.05)
+
+    @pytest.mark.parametrize("cv", [0.5, 2.0, 4.0])
+    def test_burst_hits_target_cv(self, cv):
+        ts = workload.arrival_times(workload.burst(1e6, cv), 40_000, seed=3)
+        gaps = [b - a for a, b in zip(ts, ts[1:])]
+        mean = sum(gaps) / len(gaps)
+        assert mean == pytest.approx(1e-6, rel=0.1)
+        var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+        assert math.sqrt(var) / mean == pytest.approx(cv, rel=0.15)
+
+    def test_trace_replay_verbatim_and_tiling(self):
+        spec = workload.trace([0.0, 1e-6, 2e-6, 5e-6])
+        assert workload.arrival_times(spec, 3) == [0.0, 1e-6, 2e-6]
+        # shorter than n: the trace tiles back to back, gaps preserved
+        ts = workload.arrival_times(spec, 6)
+        assert ts[:4] == [0.0, 1e-6, 2e-6, 5e-6]
+        assert ts[4] > ts[3]
+        assert ts[5] - ts[4] == pytest.approx(1e-6)
+
+    def test_arrival_cycles_conversion(self):
+        spec = workload.trace([0.0, 1e-6])    # 1 us @ 1.25 GHz = 1250 cy
+        cy = workload.arrival_cycles(spec, 2)
+        assert cy[0] == pytest.approx(0.0)
+        assert cy[1] == pytest.approx(aie_arch.cycles_from_ns(1e3))
+
+
+class _FakeFleet:
+    """Admits everything except every 3rd offer (to exercise shed paths)."""
+
+    def __init__(self, shed_every=None):
+        self.offers = []
+        self.shed_every = shed_every
+
+    def offer(self, x, tenant=None):
+        self.offers.append((x, tenant))
+        if self.shed_every and len(self.offers) % self.shed_every == 0:
+            return None
+        return object()
+
+
+class TestDrive:
+    def test_closed_loop_back_to_back(self):
+        fleet = _FakeFleet()
+        dr = workload.drive(fleet, list(range(10)), workload.closed(),
+                            tenant="t", sleep=lambda s: None,
+                            clock=lambda: 0.0)
+        assert dr.offered == dr.admitted == 10
+        assert dr.shed == 0
+        assert dr.admitted_idx == list(range(10))
+        assert [t for _, t in fleet.offers] == ["t"] * 10
+
+    def test_open_loop_paces_and_counts_sheds(self):
+        fleet = _FakeFleet(shed_every=3)
+        t = [0.0]
+        slept = []
+
+        def clock():
+            return t[0]
+
+        def sleep(s):
+            slept.append(s)
+            t[0] += s
+
+        dr = workload.drive(fleet, list(range(9)), workload.poisson(1e3),
+                            seed=0, sleep=sleep, clock=clock)
+        assert dr.offered == 9
+        assert dr.shed == 3
+        assert dr.admitted == 6
+        assert len(dr.requests) == 6
+        assert len(dr.admitted_idx) == 6
+        assert all(i % 3 != 2 for i in dr.admitted_idx)
+        assert slept and all(s > 0 for s in slept)
+        assert dr.offered_eps > 0
+        assert dr.summary()["shed"] == 3
