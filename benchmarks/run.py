@@ -50,11 +50,16 @@ def _git_rev() -> str:
         return "unknown"
 
 
-def _update_history(name: str, res: dict, dt: float) -> None:
-    """Write BENCH_<name>.json; warn on >10% drift vs the committed prior."""
+def _update_history(name: str, res: dict, dt: float) -> list:
+    """Write BENCH_<name>.json; warn on >10% drift vs the committed prior.
+
+    Returns the list of violation strings (one per drifted scalar) so
+    ``--strict-history`` can turn the warnings into a non-zero exit.
+    """
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     scalars = {k: v for k, v in res.items()
                if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    violations = []
     if os.path.exists(path):
         with open(path) as f:
             prior = json.load(f)
@@ -64,9 +69,11 @@ def _update_history(name: str, res: dict, dt: float) -> None:
                 continue
             change = abs(new - old) / abs(old)
             if change > REGRESSION_WARN:
-                print(f"[bench] WARNING {name}.{k}: {old:.4g} -> {new:.4g} "
-                      f"({100 * change:.1f}% change vs baseline "
-                      f"{prior.get('git_rev', '?')})")
+                msg = (f"{name}.{k}: {old:.4g} -> {new:.4g} "
+                       f"({100 * change:.1f}% change vs baseline "
+                       f"{prior.get('git_rev', '?')})")
+                violations.append(msg)
+                print(f"[bench] WARNING {msg}")
     with open(path, "w") as f:
         json.dump({"bench": name, "git_rev": _git_rev(),
                    "date": time.strftime("%Y-%m-%d"),
@@ -74,6 +81,7 @@ def _update_history(name: str, res: dict, dt: float) -> None:
                   indent=1, sort_keys=True)
         f.write("\n")
     print(f"[bench] history -> {path}")
+    return violations
 
 
 def main(argv=None) -> None:
@@ -85,12 +93,20 @@ def main(argv=None) -> None:
                     help="persist headline scalars to BENCH_<name>.json at "
                          "the repo root; warn on >10%% drift vs the "
                          "committed baseline")
+    ap.add_argument("--strict-history", action="store_true",
+                    help="implies --history; exit non-zero after running "
+                         "every selected benchmark if any headline scalar "
+                         "moved more than 10%% against its committed "
+                         "baseline (the CI-enforceable form of the warning)")
     args = ap.parse_args(argv)
+    if args.strict_history:
+        args.history = True
     for n in args.names:
         if n not in BENCHES:
             ap.error(f"unknown benchmark {n!r} (choices: {list(BENCHES)})")
     names = args.names or list(BENCHES)
     summary = []
+    violations = []
     for name in names:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         t0 = time.time()
@@ -98,13 +114,18 @@ def main(argv=None) -> None:
         dt = time.time() - t0
         summary.append((name, dt, res))
         if args.history:
-            _update_history(name, res, dt)
+            violations.extend(_update_history(name, res, dt))
     print(f"\n{'=' * 72}\n== summary\n{'=' * 72}")
     print("benchmark,seconds,key=value ...")
     for name, dt, res in summary:
         kv = " ".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
                       for k, v in list(res.items())[:6])
         print(f"{name},{dt:.1f},{kv}")
+    if args.strict_history and violations:
+        raise SystemExit(
+            f"[bench] --strict-history: {len(violations)} scalar(s) drifted "
+            f">{100 * REGRESSION_WARN:.0f}% vs committed baselines:\n  "
+            + "\n  ".join(violations))
 
 
 if __name__ == "__main__":

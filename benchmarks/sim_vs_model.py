@@ -1,6 +1,6 @@
 """Fig. 9-style sim-vs-model report for the Tier-S discrete-event simulator.
 
-Four sections:
+Five sections:
 
   1. **Table 2 shapes** — every paper-measured single-AIE kernel, mapped
      1x1x1 and executed by the simulator; reports mean |sim - analytic|
@@ -18,6 +18,13 @@ Four sections:
      shared shim columns: congestion-free vs analytic-contended vs
      simulated events/sec on the serial basis; the sim penalty must be
      nonzero for at least one packing that shares columns.
+  5. **Critical-path blame** — on every Table 2 shape and Table 3 DSE
+     winner, the walked-back Tier-S blame must conserve (sum to the
+     event's sojourn to float precision, single-event critical path
+     exactly ``end_to_end_cycles``) and agree with the Tier-A
+     ``perfmodel.latency_blame`` shares within the 5% ``model.blame.*``
+     drift gate; one causal what-if (prologue x0.5) is validated against
+     an actual re-simulation under scaled overheads (<= 2%).
 
 Artifacts: ``benchmarks/out/sim_vs_model.json`` (full report) and
 ``benchmarks/out/sim_trace_multitenant.json`` (Chrome trace of the most
@@ -200,6 +207,77 @@ def _contention_section(smoke: bool, seed: int, events: int) -> dict:
     return {"packings": packings, "max_penalty_sim": max_pen}
 
 
+def _blame_section(names, seed: int) -> dict:
+    """Critical-path blame: conservation, Tier-A agreement, what-if check.
+
+    For every Table 2 shape (1x1x1) and Table 3 DSE winner: the Tier-S
+    per-event blame must sum to the event's sojourn (float precision), a
+    single-event critical path must equal ``end_to_end_cycles`` exactly,
+    and the Tier-A :func:`perfmodel.latency_blame` decomposition must
+    agree with the walked-back Tier-S shares within the 5% drift gate
+    (``model.blame.*`` family). One documented what-if — halving the MM
+    prologue constants — is validated against an actual re-simulation
+    under :func:`perfmodel.scale_overheads` (acceptance: <= 2%).
+    """
+    from repro.obs import profile as obsprofile
+    from repro.obs.drift import DriftMonitor
+
+    mon = DriftMonitor()
+    designs = []
+    for (m, k, n) in perfmodel.TABLE2_NS:
+        layer = LayerSpec(kind="mm", M=m, K=k, N=n, name=f"{m}x{k}x{n}")
+        spec = ModelSpec((layer,), name=f"t2-{m}x{k}x{n}")
+        mm = ModelMapping(model=spec, mappings=(Mapping(1, 1, 1, layer),))
+        designs.append((spec.name, place(mm)))
+    for name in names:
+        design = dse.explore(layerspec.REALISTIC_WORKLOADS[name]())
+        if design is not None:
+            designs.append((name, design.placement))
+
+    rows, cons_max, cp_exact = [], 0.0, True
+    for name, pl in designs:
+        res = simrun.simulate_placement(
+            pl, tenant=name, config=simrun.SimConfig(trace=False, seed=seed))
+        prof = obsprofile.profile_run(res)
+        assert not prof.check(), f"{name}: blame does not conserve"
+        ep = prof.events[0]
+        cons_max = max(cons_max, abs(ep.conservation_error()))
+        if ep.critical_path_cycles != res.latency_cycles:
+            cp_exact = False
+        obsprofile.feed_blame_drift(mon, name, perfmodel.latency_blame(pl),
+                                    prof.blame_cycles())
+        dom = max(prof.blame_shares().items(), key=lambda kv: abs(kv[1]))
+        rows.append({"design": name, "dominant": dom[0],
+                     "dominant_share": dom[1]})
+    mape = mon.family_mape("model.blame.")
+    print(f"blame over {len(designs)} designs: conservation residual "
+          f"<= {cons_max:.2e} cycles, single-event critical path exact: "
+          f"{cp_exact}, Tier-A vs Tier-S share MAPE {100 * mape:.4f}% "
+          f"(gate <= 5%)")
+
+    # What-if: halve the MM prologue constants causally, then actually
+    # re-simulate under the scaled overhead params and compare speedups.
+    name, pl = designs[-1]
+    res = simrun.simulate_placement(
+        pl, tenant=name, config=simrun.SimConfig(trace=False, seed=seed))
+    proj = obsprofile.whatif(res, "prologue", 0.5)
+    p2 = perfmodel.scale_overheads(perfmodel.OVERHEADS, "prologue", 0.5)
+    res2 = simrun.simulate_placement(
+        pl, tenant=name,
+        config=simrun.SimConfig(trace=False, seed=seed), p=p2)
+    actual = res.latency_cycles / res2.latency_cycles
+    whatif_err = abs(proj.speedup - actual) / actual
+    print(f"what-if prologue x0.5 on {name}: projected {proj.speedup:.4f}x "
+          f"vs re-simulated {actual:.4f}x ({100 * whatif_err:.3f}% err, "
+          f"acceptance <= 2%)")
+    return {"rows": rows, "blame_share_mape": float(mape),
+            "conservation_max_cycles": cons_max,
+            "critical_path_exact": cp_exact,
+            "whatif_projected_speedup": proj.speedup,
+            "whatif_resim_speedup": actual,
+            "whatif_rel_err": whatif_err}
+
+
 def main(*, smoke: bool = False, seed: int = 0, events: int = 8) -> dict:
     report = {"seed": seed, "smoke": smoke}
     print("== Table 2 single-AIE shapes ==")
@@ -213,18 +291,25 @@ def main(*, smoke: bool = False, seed: int = 0, events: int = 8) -> dict:
     print("\n== Multi-tenant shim contention ==")
     report["contention"] = _contention_section(smoke, seed,
                                                events=4 if smoke else events)
+    print("\n== Critical-path blame attribution ==")
+    report["blame"] = _blame_section(names, seed)
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=2)
     print(f"\nJSON report written to {OUT_JSON}")
     ok = (report["table2"]["mean_err"] <= 0.10
           and report["pipelined"]["mean_err"] <= 0.02
-          and report["contention"]["max_penalty_sim"] > 0.0)
+          and report["contention"]["max_penalty_sim"] > 0.0
+          and report["blame"]["blame_share_mape"] <= 0.05
+          and report["blame"]["critical_path_exact"]
+          and report["blame"]["whatif_rel_err"] <= 0.02)
     print(f"acceptance: {'PASS' if ok else 'FAIL'}")
     return {"table2_mean_err": report["table2"]["mean_err"],
             "workload_mean_err": report["workloads"]["mean_err"],
             "pipelined_mean_err": report["pipelined"]["mean_err"],
             "max_contention_penalty": report["contention"]["max_penalty_sim"],
+            "blame_share_mape": report["blame"]["blame_share_mape"],
+            "whatif_rel_err": report["blame"]["whatif_rel_err"],
             "acceptance_pass": int(ok)}
 
 

@@ -5,13 +5,18 @@ Tier-S simulated latency (they must agree for a single tenant), the
 pipelined headline — initiation interval and the sustained events/sec a
 deep-pipelined run converges to — then packs replicas onto the shared
 array and shows what shim-column contention does to both the serial and
-the pipelined congestion-free throughput claims. Writes a Chrome trace you
-can open at chrome://tracing or https://ui.perfetto.dev.
+the pipelined congestion-free throughput claims. Along the way it profiles
+*where the cycles go*: the per-category critical-path blame table
+(``repro.obs.profile_run``) and the top causal what-if levers
+(``repro.obs.top_levers``). Writes a Chrome trace — with the critical
+path drawn as flow arrows — you can open at chrome://tracing or
+https://ui.perfetto.dev.
 
     PYTHONPATH=src python examples/simulate_deepsets.py [workload]
 """
 import sys
 
+from repro import obs
 from repro.core import aie_arch, dse, perfmodel, tenancy
 from repro.core.layerspec import REALISTIC_WORKLOADS
 from repro.sim import run as simrun
@@ -38,9 +43,24 @@ print(f"{model.name} pipelined: II {aie_arch.ns(pb.interval):.1f} ns "
       f"{design.latency.total / pb.interval:.2f}x over the serial "
       f"{1e3 / design.latency.total_ns:.3f} Meps (1/latency)")
 
+# where do the cycles go? walk back each event's critical path and split
+# the measured sojourn into the paper's overhead taxonomy; then ask the
+# causal what-if engine which overhead category is the best lever
+# (scales the recorded DAG and replays it — waits re-emerge, so this is
+# Amdahl on the true schedule, not on aggregate shares)
+prof = obs.profile_run(res)
+assert not prof.check()          # blame conserves: segments sum to sojourn
+print(f"\n{model.name} critical-path blame "
+      f"(sums to the {res.latency_ns:.1f} ns sojourn):")
+print(prof.table())
+for lv in obs.top_levers(res)[:3]:
+    print(f"what-if {lv.category} x{lv.factor:g}: "
+          f"{lv.speedup:.3f}x projected event speedup")
+
+obs.add_flow_events(prof, res.trace)   # causal arrows along the path
 path = f"sim_trace_{model.name}.json"
 res.trace.save(path)
-print(f"Chrome trace -> {path}")
+print(f"Chrome trace (with critical-path flow arrows) -> {path}")
 
 print("\nreplica packing vs shim-column contention "
       "(serial depth-1 | pipelined):")

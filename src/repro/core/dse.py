@@ -40,8 +40,8 @@ from .mapping import Mapping, ModelMapping, cascade_compatible, enumerate_mappin
 from .placement import Placement, place
 from .perfmodel import (LatencyBreakdown, cascade_comm_cycles, dma_comm_cycles,
                         end_to_end_cycles, initiation_interval_cycles,
-                        layer_comp_cycles, layer_occupancy, plio_cycles,
-                        shim_stage_cycles)
+                        latency_blame, layer_comp_cycles, layer_occupancy,
+                        plio_cycles, shim_stage_cycles)
 
 
 @dataclasses.dataclass
@@ -60,6 +60,9 @@ class DSEResult:
     #: sustains 1/II events/cycle even though each event takes the full
     #: latency to flow through.
     interval_cycles: Optional[float] = None
+    #: Closed-form latency attribution (perfmodel.latency_blame), filled by
+    #: ``search(explain=True)`` — signed cycles per blame category.
+    blame: Optional[Dict[str, float]] = None
 
     @property
     def latency_ns(self) -> float:
@@ -78,12 +81,35 @@ class DSEResult:
     def cascade_edges(self) -> int:
         return sum(self.placement.cascade_links())
 
+    @property
+    def dominant_blame(self) -> Optional[Tuple[str, float]]:
+        """(category, share) of the largest blame category, or None when
+        the design was not scored with ``explain=True``."""
+        if not self.blame:
+            return None
+        total = sum(self.blame.values())
+        cat = max(self.blame, key=lambda c: abs(self.blame[c]))
+        return cat, (self.blame[cat] / total if total else 0.0)
+
+    def why_wins(self) -> str:
+        """One-line attribution of where this design's latency goes."""
+        if not self.blame:
+            return "(no blame annotation; use dse.search(explain=True))"
+        total = sum(self.blame.values())
+        top = sorted(self.blame.items(), key=lambda kv: -abs(kv[1]))[:3]
+        parts = ", ".join(
+            f"{c} {100 * v / total:.0f}%" if total else c for c, v in top)
+        return f"dominated by {parts}"
+
     def summary(self) -> str:
         maps = ", ".join(f"{m.A}x{m.B}x{m.C}" for m in self.mapping.mappings)
-        return (f"{self.model.name}: {self.latency_ns:.1f} ns, "
-                f"{self.mapping.total_tiles} tiles, "
-                f"{self.cascade_edges}/{self.model.num_layers - 1} cascade edges, "
-                f"maps [{maps}]")
+        s = (f"{self.model.name}: {self.latency_ns:.1f} ns, "
+             f"{self.mapping.total_tiles} tiles, "
+             f"{self.cascade_edges}/{self.model.num_layers - 1} cascade edges, "
+             f"maps [{maps}]")
+        if self.blame:
+            s += f" — {self.why_wins()}"
+        return s
 
 
 def _edge_cost_estimate(prev: Mapping, nxt: Mapping, *, force_dma: bool,
@@ -700,6 +726,7 @@ def search(model: ModelSpec, *,
            exhaustive: bool = False,
            chunk: int = 1 << 16,
            rescore: Optional[Callable[[DSEResult], float]] = None,
+           explain: bool = False,
            registry=None, tracer=None) -> List[DSEResult]:
     """Placement-validated Pareto frontier over {tiles, latency, II}.
 
@@ -735,6 +762,13 @@ def search(model: ModelSpec, *,
     exact frontier of the estimate-swept space rather than a 96-sample of
     it — ``benchmarks/dse_throughput.py`` reports the points it finds that
     top-K missed.
+
+    ``explain=True`` annotates every returned frontier design with its
+    closed-form blame decomposition (``DSEResult.blame``, via
+    :func:`repro.core.perfmodel.latency_blame`) so each winner carries a
+    one-line "why it wins" — :meth:`DSEResult.why_wins` names the dominant
+    blame categories, which is what separates e.g. a shim-bound wide
+    design from a prologue-bound deep one at the same latency.
 
     ``registry`` (a :class:`repro.obs.MetricsRegistry`) and ``tracer``
     (a :class:`repro.obs.Tracer`) record search telemetry: counters
@@ -792,6 +826,10 @@ def search(model: ModelSpec, *,
     front = pareto_front_nd(
         scored,
         lambda d: (d.mapping.total_tiles, cost(d), d.interval_cycles))
+    if explain:
+        for d in front:
+            d.blame = latency_blame(d.placement, p=p,
+                                    include_plio=include_plio)
     obs.count("dse.pareto_survivors", len(front))
     return front
 

@@ -549,6 +549,161 @@ def end_to_end_cycles(placement: Placement, *, p: OverheadParams = OVERHEADS,
 
 
 # ---------------------------------------------------------------------------
+# Latency blame: Eq. (1)-(6) re-summed per overhead category (Tier-A side of
+# the critical-path attribution layer; Tier-S twin in repro.obs.profile)
+# ---------------------------------------------------------------------------
+
+#: The paper's overhead taxonomy, as blame categories. Values are *signed*
+#: cycles: ``agg_fixed`` is a fitted negative constant, so an aggregation
+#: layer's ``prologue`` share can be below zero — the decomposition is a
+#: signed re-summation of Eq. (1)-(6), not a partition into positive parts.
+#: The Tier-S profiler adds the emergent wait categories on top
+#: (``queue_wait``, ``xtenant:<label>``, ``admission_wait``), which exist
+#: only under contention and are therefore absent from the analytic side.
+BLAME_CATEGORIES: Tuple[str, ...] = (
+    "shim_ingest", "shim_egress", "compute", "prologue", "sync", "store",
+    "comm_cascade", "comm_dma", "comm_sharedmem")
+
+#: Which OverheadParams constants a blame category's cycles scale with —
+#: the validation hook for :func:`repro.obs.profile.whatif`: projecting
+#: ``whatif(cat, f)`` on the recorded DAG must agree with re-simulating
+#: under ``scale_overheads(p, cat, f)``. Only the categories that are
+#: *linear* in their constants are listed (``store`` is excluded: the
+#: bias/ReLU term is clamped at zero, so scaling its constants is not
+#: guaranteed to scale the cost).
+BLAME_PARAM_KNOBS: Dict[str, Tuple[str, ...]] = {
+    "prologue": ("l_epi", "l_o", "agg_fixed"),
+    "sync": ("l_cas", "agg_per_aie"),
+}
+
+
+def scale_overheads(p: OverheadParams, category: str,
+                    factor: float) -> OverheadParams:
+    """Counterfactual params with one blame category's constants scaled."""
+    knobs = BLAME_PARAM_KNOBS.get(category)
+    if knobs is None:
+        raise ValueError(
+            f"no parameter knobs for category {category!r} "
+            f"(choices: {sorted(BLAME_PARAM_KNOBS)})")
+    return dataclasses.replace(
+        p, **{k: getattr(p, k) * factor for k in knobs})
+
+
+def _add_blame(blame: Dict[str, float], cat: str, cycles: float) -> None:
+    if cycles:
+        blame[cat] = blame.get(cat, 0.0) + cycles
+
+
+def mm_loop_blame(W1: int, *, n_loops: float, cascaded: bool,
+                  p: OverheadParams = OVERHEADS, dtype: str = "int8",
+                  ideal: bool = False) -> Dict[str, float]:
+    """Blame of ``n_loops`` j-loop iterations (Eq. 2/3 split per term).
+
+    The values sum to ``n_loops * l_j_cycles(...)`` (up to float
+    association): ``compute`` is the ideal MAC time, ``prologue`` the VLIW
+    epilogue stall ``l_epi``, ``sync`` the cascade back-pressure ``l_cas``.
+    """
+    _, bk, _ = _blk(dtype)
+    out = {"compute": n_loops * (4.0 * W1 / bk)}
+    if not ideal:
+        out["prologue"] = n_loops * p.l_epi
+        if cascaded:
+            out["sync"] = n_loops * p.l_cas
+    return out
+
+
+def mm_epilogue_blame(H1: int, W2: int, *, out_cascade: bool, bias_relu: bool,
+                      p: OverheadParams = OVERHEADS,
+                      ideal: bool = False) -> Dict[str, float]:
+    """Blame of the non-pipelined L_o epilogue of Eq. (1)/(4):
+    ``prologue`` = launch/sync constant, ``store`` = local-store DMA +
+    the fused bias/ReLU/requant tail."""
+    if ideal:
+        return {}
+    out = {"prologue": p.l_o}
+    store = 0.0
+    if not out_cascade:
+        store += p.l_o_store_dma * (H1 * W2)
+    if bias_relu:
+        store += br_overhead(H1, W2, p)
+    if store:
+        out["store"] = store
+    return out
+
+
+def agg_blame(A: int, H1: int, W2: int, *, p: OverheadParams = OVERHEADS,
+              ideal: bool = False, dtype: str = "int8") -> Dict[str, float]:
+    """Blame of an A-AIE aggregation chain (§4.3.1): ``compute`` = VMACs,
+    ``sync`` = per-AIE shared-memory handoffs, ``prologue`` = the fitted
+    fixed kernel constant (negative — see :data:`BLAME_CATEGORIES`)."""
+    bm, bk, bn = _blk(dtype)
+    vmacs = float(math.ceil(H1 / bk) * math.ceil(W2 / bn))
+    if ideal:
+        return {"compute": vmacs}
+    return {"compute": vmacs, "prologue": p.agg_fixed,
+            "sync": p.agg_per_aie * A}
+
+
+def layer_blame(m: Mapping, *, out_cascade: bool,
+                p: OverheadParams = OVERHEADS,
+                ideal: bool = False) -> Dict[str, float]:
+    """Eq. (4) layer cost split into blame categories. The values sum to
+    :func:`layer_comp_cycles` for the same arguments (up to float
+    association — the blame multiplies each term out separately)."""
+    l = m.layer
+    if l.kind == "agg":
+        return agg_blame(m.A, m.H1, m.W2, p=p, ideal=ideal, dtype=m.dtype)
+    blame = mm_loop_blame(m.W1, n_loops=float(m.j_loops + m.B - 1),
+                          cascaded=m.B > 1, p=p, dtype=m.dtype, ideal=ideal)
+    for k, v in mm_epilogue_blame(m.H1, m.W2, out_cascade=out_cascade,
+                                  bias_relu=bool(l.bias or l.relu), p=p,
+                                  ideal=ideal).items():
+        _add_blame(blame, k, v)
+    return blame
+
+
+def latency_blame(placement: Placement, *, p: OverheadParams = OVERHEADS,
+                  ideal: bool = False,
+                  include_plio: bool = True) -> Dict[str, float]:
+    """Closed-form latency attribution from the Eq. (1)-(6) stage terms.
+
+    Returns signed cycles per :data:`BLAME_CATEGORIES` entry (every
+    category present, zero when unused), summing to
+    ``end_to_end_cycles(...).total`` up to float association. This is the
+    Tier-A side of the ``model.blame.*`` drift family: the Tier-S
+    counterpart (:func:`repro.obs.profile.profile_run`) measures the same
+    categories on the simulated critical path, and CI gates their
+    share-wise agreement like it already gates total latency.
+    """
+    mm = placement.model_mapping
+    maps = mm.mappings
+    links = placement.cascade_links()
+    blame = {c: 0.0 for c in BLAME_CATEGORIES}
+    if include_plio:
+        first, last = maps[0], maps[-1]
+        blame["shim_ingest"] = plio_cycles(first.layer.in_bytes,
+                                           first.A * first.B, p=p, ideal=ideal)
+        blame["shim_egress"] = plio_cycles(last.layer.out_bytes,
+                                           last.A * last.C, p=p, ideal=ideal)
+    for i, m in enumerate(maps):
+        out_cas = i < len(links) and links[i]
+        for k, v in layer_blame(m, out_cascade=out_cas, p=p,
+                                ideal=ideal).items():
+            blame[k] += v
+    for e in edge_comms(placement, p=p, ideal=ideal):
+        blame[f"comm_{e.kind}"] += e.cycles
+    return blame
+
+
+def blame_shares(blame: Dict[str, float]) -> Dict[str, float]:
+    """Normalize a blame dict to fractions of its (signed) total."""
+    total = sum(blame.values())
+    if not total:
+        return {k: 0.0 for k in blame}
+    return {k: v / total for k, v in blame.items()}
+
+
+# ---------------------------------------------------------------------------
 # Calibration: fit OverheadParams to the paper's measured tables
 # ---------------------------------------------------------------------------
 

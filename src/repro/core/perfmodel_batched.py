@@ -457,6 +457,69 @@ def initiation_interval_cycles_v(batch: DesignBatch, *,
                           streams_per_col=streams_per_col).max(axis=1)
 
 
+def latency_blame_v(batch: DesignBatch, *, p: OverheadParams = OVERHEADS,
+                    ideal: bool = False, include_plio: bool = True):
+    """Vector twin of :func:`perfmodel.latency_blame` over a batch.
+
+    Returns ``{category: [N] float64}`` over
+    :data:`perfmodel.BLAME_CATEGORIES`, mirroring the scalar accumulation
+    order term by term (each Eq. (1)-(6) piece multiplied out separately,
+    layers then edges left to right), so ``latency_blame_v(batch)[c][i]``
+    ``== latency_blame(placements[i])[c]`` bit for bit — the parity tests
+    assert ``==``, not ``isclose``.
+    """
+    from .perfmodel import BLAME_CATEGORIES
+    _, bk, bn = _blk(batch.dtype)
+    n = batch.n
+    blame = {c: np.zeros(n) for c in BLAME_CATEGORIES}
+    if include_plio:
+        blame["shim_ingest"] = plio_cycles_v(
+            batch.model.layers[0].in_bytes, batch.A[:, 0] * batch.B[:, 0],
+            p=p, ideal=ideal)
+        blame["shim_egress"] = plio_cycles_v(
+            batch.model.layers[-1].out_bytes, batch.A[:, -1] * batch.C[:, -1],
+            p=p, ideal=ideal)
+    for i in range(batch.num_layers):
+        layer = batch.model.layers[i]
+        H1, W1, W2 = batch.H1[:, i], batch.W1[:, i], batch.W2[:, i]
+        if layer.kind == "agg":
+            vmacs = (_ceil_div(H1, bk) * _ceil_div(W2, bn)).astype(np.float64)
+            blame["compute"] = blame["compute"] + vmacs
+            if not ideal:
+                blame["prologue"] = blame["prologue"] + p.agg_fixed
+                blame["sync"] = blame["sync"] + (
+                    p.agg_per_aie * batch.A[:, i].astype(np.float64))
+            continue
+        B = batch.B[:, i]
+        n_eff = (j_loops_v(H1, W2, batch.dtype) + B - 1).astype(np.float64)
+        base = 4.0 * np.asarray(W1, dtype=np.float64) / bk
+        blame["compute"] = blame["compute"] + n_eff * base
+        if ideal:
+            continue
+        blame["prologue"] = blame["prologue"] + (n_eff * p.l_epi + p.l_o)
+        blame["sync"] = blame["sync"] + np.where(B > 1, n_eff * p.l_cas, 0.0)
+        out_cas = _out_cascade(batch, i)
+        store = np.where(out_cas, 0.0,
+                         p.l_o_store_dma * (np.asarray(H1, np.int64)
+                                            * np.asarray(W2, np.int64)
+                                            ).astype(np.float64))
+        if layer.bias or layer.relu:
+            store = store + br_overhead_v(H1, W2, p)
+        blame["store"] = blame["store"] + store
+    for i in range(batch.num_layers - 1):
+        linked = batch.cascade[:, i]
+        # Scalar edge_comms prices every linked edge at the Eq. (6) gap;
+        # the *kind* (cascade vs shared-mem into an agg consumer) only
+        # names the category.
+        cas_cat = ("comm_sharedmem"
+                   if batch.model.layers[i + 1].kind == "agg"
+                   else "comm_cascade")
+        cycles = edge_comms_v(batch, i, p=p, ideal=ideal)
+        blame[cas_cat] = blame[cas_cat] + np.where(linked, cycles, 0.0)
+        blame["comm_dma"] = blame["comm_dma"] + np.where(linked, 0.0, cycles)
+    return blame
+
+
 def score_batch(batch: DesignBatch, *, p: OverheadParams = OVERHEADS,
                 ideal: bool = False, include_plio: bool = True
                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

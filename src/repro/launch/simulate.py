@@ -41,6 +41,18 @@ from repro.sim import run as simrun
 WORKLOADS = {name.lower(): fn
              for name, fn in layerspec.REALISTIC_WORKLOADS.items()}
 
+_EPILOG = """\
+deprecations:
+  --jitter    deprecated: uniform arrival jitter predates the seeded
+              arrival processes and models the same thing less faithfully.
+              Use --arrivals instead (poisson:<eps> is the open-loop
+              equivalent; a closed-loop run simply omits both flags).
+              --jitter still works standalone (with a warning) and is
+              ignored when --arrivals is given; it will be removed two
+              releases after this deprecation, at which point passing it
+              becomes an error.
+"""
+
 
 def _simulate_single(args, cfg: simrun.SimConfig) -> simrun.SimResult:
     spec = WORKLOADS[args.model]()
@@ -124,7 +136,10 @@ def _simulate_tenants(args, cfg: simrun.SimConfig) -> simrun.SimResult:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=_EPILOG)
     ap.add_argument("--model", choices=sorted(WORKLOADS), default="deepsets-32")
     ap.add_argument("--mix", type=str, default=None,
                     help="comma-separated workloads packed side by side "
@@ -153,6 +168,17 @@ def main() -> None:
     ap.add_argument("--metrics-out", type=str, default=None,
                     help="write the run's metrics-registry snapshot "
                          "(utilization, queueing, latency histograms) as JSON")
+    ap.add_argument("--profile-out", type=str, default=None,
+                    help="walk back each event's critical path and write the "
+                         "per-category blame profile (cycles, shares, "
+                         "per-event breakdown, what-if levers) as JSON")
+    ap.add_argument("--flame-out", type=str, default=None,
+                    help="write folded flamegraph stacks "
+                         "(label;stage;category cycles) of the blame profile")
+    ap.add_argument("--blame-gate", type=float, default=None,
+                    help="exit non-zero when the Tier-A vs Tier-S blame-share "
+                         "MAPE (model.blame.* drift family) exceeds this "
+                         "fraction (e.g. 0.05)")
     ap.add_argument("--tier-s", action="store_true",
                     help="also re-rank the DSE frontier by simulated latency")
     args = ap.parse_args()
@@ -211,8 +237,57 @@ def main() -> None:
                 print(f"[sim]   {d.mapping.total_tiles:4d} tiles  "
                       f"{d.latency.total_ns:8.1f}  {d.sim_latency_ns:8.1f}")
 
+    prof = None
+    blame_mape = None
+    if (args.profile_out or args.flame_out or args.blame_gate is not None):
+        from repro.core.perfmodel import latency_blame
+        from repro.obs import profile as obsprofile
+        from repro.obs.drift import DriftMonitor
+
+        prof = obsprofile.profile_run(res)
+        bad = prof.check()
+        if bad:
+            raise SystemExit("[sim] blame conservation violations:\n  "
+                             + "\n  ".join(bad[:10]))
+        shares = prof.blame_shares()
+        top3 = sorted(shares.items(), key=lambda kv: -abs(kv[1]))[:3]
+        print("[sim] blame (Tier-S critical path): "
+              + ", ".join(f"{c} {100 * s:.1f}%" for c, s in top3)
+              + f" of {sum(prof.blame_cycles().values()):.0f} cycles")
+        levers = obsprofile.top_levers(res)
+        if levers:
+            lv = levers[0]
+            print(f"[sim] top lever: {lv.category} x{lv.factor:g} -> "
+                  f"{lv.speedup:.3f}x projected event speedup "
+                  f"(what-if replay, waits re-emerge)")
+        n_flows = obsprofile.add_flow_events(prof, res.trace)
+        mon = DriftMonitor()
+        for inst in res.instances:
+            obsprofile.feed_blame_drift(
+                mon, inst.label, latency_blame(inst.placement),
+                prof.blame_cycles(label=inst.label))
+        blame_mape = mon.family_mape("model.blame.")
+        if blame_mape is not None:
+            print(f"[sim] Tier-A vs Tier-S blame-share MAPE "
+                  f"{100 * blame_mape:.2f}% over {len(res.instances)} "
+                  f"instance(s); {n_flows} critical-path flow arrows traced")
+        if args.profile_out:
+            import json
+            d = prof.as_dict()
+            d["blame_mape"] = blame_mape
+            d["top_levers"] = [lv.as_dict() for lv in levers]
+            with open(args.profile_out, "w") as f:
+                json.dump(d, f, indent=1)
+            print(f"[sim] blame profile -> {args.profile_out}")
+        if args.flame_out:
+            with open(args.flame_out, "w") as f:
+                f.write(prof.folded())
+            print(f"[sim] folded flamegraph stacks -> {args.flame_out}")
+
     if args.metrics_out:
         reg = res.export_metrics()
+        if prof is not None:
+            prof.export_metrics(reg)
         reg.save(args.metrics_out,
                  extra={"driver": "simulate",
                         "workload": args.mix or args.model,
@@ -233,6 +308,19 @@ def main() -> None:
         raise SystemExit("invariant violations:\n  " + "\n  ".join(errs[:10]))
     print("[sim] invariants: clean "
           "(bytes conserved, no double-booking, spans nested)")
+    if args.blame_gate is not None:
+        # After artifacts + trace are written, so a failing run still
+        # leaves the evidence on disk for CI to upload.
+        if blame_mape is None:
+            raise SystemExit("[sim] blame drift gate: no model.blame.* "
+                             "entries populated")
+        if blame_mape > args.blame_gate:
+            raise SystemExit(
+                f"[sim] blame drift gate FAILED: Tier-A vs Tier-S "
+                f"blame-share MAPE {100 * blame_mape:.2f}% exceeds "
+                f"{100 * args.blame_gate:.2f}%")
+        print(f"[sim] blame drift gate: PASS "
+              f"({100 * blame_mape:.2f}% <= {100 * args.blame_gate:.2f}%)")
 
 
 if __name__ == "__main__":

@@ -89,6 +89,28 @@ as labels (never baked into the name):
                                      drift family (see below): analytic
                                      queueing model vs DES on one shared
                                      arrival trace, CI-gated at 10%
+  ``profile.blame.cycles`` / ``profile.blame.share``  gauge {instance,
+                                     category} — critical-path blame from
+                                     :func:`repro.obs.profile.profile_run`:
+                                     cycles (and share of total) each
+                                     overhead category contributes to the
+                                     walked-back critical paths. Category
+                                     is either one of
+                                     ``perfmodel.BLAME_CATEGORIES`` or an
+                                     emergent Tier-S wait —
+                                     ``queue_wait`` (blocked behind this
+                                     instance's own earlier work),
+                                     ``admission_wait`` (open-loop gate),
+                                     or ``xtenant:<tenant>#<replica>``
+                                     (blocked on a shared resource held by
+                                     that co-resident instance: the blame
+                                     key *names the tenant at fault*)
+  ``model.blame.<category>`` —       drift family (see below): Tier-A
+                                     analytic blame share
+                                     (``perfmodel.latency_blame``) vs the
+                                     walked-back Tier-S share per
+                                     category, CI-gated at 5% via
+                                     ``launch.simulate --blame-gate``
 
 Drift-ratio semantics
 ---------------------
@@ -116,6 +138,15 @@ model. Two families are reported side by side and must not be conflated:
     ``repro.core.calibrate.STAGE_SUSPECTS`` and
     :meth:`DriftMonitor.localize`. ``calib.param`` entries (expect =
     frozen constant, observe = fitted) rank the constants themselves.
+    ``model.blame.<category>`` (keys = design/tenant names, written by
+    :func:`repro.obs.profile.feed_blame_drift`) gates the *decomposition*
+    rather than the total: both sides are normalized over
+    ``perfmodel.BLAME_CATEGORIES`` only — emergent Tier-S waits
+    (``queue_wait``, ``admission_wait``, ``xtenant:*``) are deliberately
+    excluded because the analytic model has no contention terms, so the
+    gate measures attribution fidelity, not queueing. Shares are signed
+    (a negative calibration constant yields a negative share) and a
+    category empty on both sides is skipped, not scored as agreement.
   * ``serve.*`` metrics compare the modeled VEK280 numbers against
     *wall-clock CPU interpret-mode* serving, where the ratio is expected
     to be orders of magnitude above 1 — it tracks relative drift of the
@@ -125,6 +156,9 @@ from __future__ import annotations
 
 from .drift import DriftEntry, DriftMonitor
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry, P2Quantile
+from .profile import (BlameSegment, EventProfile, RunProfile,
+                      WhatIfProjection, add_flow_events, feed_blame_drift,
+                      is_wait_category, profile_run, top_levers, whatif)
 from .slo import (BurnAlert, BurnWindow, SLOReport, SLOSpec, SLOTracker,
                   parse_slo)
 from .tracing import DEFAULT_PIDS, Tracer
@@ -134,4 +168,7 @@ __all__ = [
     "Tracer", "DEFAULT_PIDS", "DriftMonitor", "DriftEntry",
     "SLOSpec", "SLOTracker", "SLOReport", "BurnWindow", "BurnAlert",
     "parse_slo",
+    "BlameSegment", "EventProfile", "RunProfile", "WhatIfProjection",
+    "profile_run", "whatif", "top_levers", "feed_blame_drift",
+    "add_flow_events", "is_wait_category",
 ]

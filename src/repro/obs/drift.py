@@ -91,6 +91,19 @@ class DriftMonitor:
         apes = [e.ape for e in self.entries(metric) if e.ape is not None]
         return sum(apes) / len(apes) if apes else None
 
+    def family_mape(self, prefix: str) -> Optional[float]:
+        """MAPE across every entry whose metric starts with ``prefix``.
+
+        The family-level aggregate for gates that span several metrics of
+        one comparison — e.g. ``family_mape("model.blame.")`` pools the
+        per-category blame-share entries into the single number the
+        ``--blame-gate`` CI step thresholds, mirroring how :meth:`mape`
+        gates one metric.
+        """
+        apes = [e.ape for (_, m), e in sorted(self._entries.items())
+                if m.startswith(prefix) and e.ape is not None]
+        return sum(apes) / len(apes) if apes else None
+
     def flagged(self, threshold: float,
                 metric: Optional[str] = None) -> List[DriftEntry]:
         """Entries whose drift exceeds ``threshold`` (|ratio - 1|)."""

@@ -87,6 +87,25 @@ class Tracer:
         self.events.append({"ph": "i", "name": name, "pid": pid, "tid": tid,
                             "ts": ts_us, "s": "t"})
 
+    def flow_us(self, pid_name: str, tid_name: str, name: str, ts_us: float,
+                *, id: int, phase: str, cat: str = "flow") -> None:
+        """One endpoint of a flow arrow ("s" start / "f" finish).
+
+        Chrome/Perfetto bind the endpoint to the enclosing "X" slice at the
+        same pid/tid whose interval covers ``ts_us``, and match arrows by
+        (cat, name, id) — so emit both endpoints with the same id. Used by
+        :func:`repro.obs.profile.add_flow_events` to draw the causal edges
+        of each event's critical path across the task spans.
+        """
+        if phase not in ("s", "f"):
+            raise ValueError(f"flow phase must be 's' or 'f', got {phase!r}")
+        pid, tid = self._ids(pid_name, tid_name)
+        ev = {"ph": phase, "cat": cat, "name": name, "id": id,
+              "pid": pid, "tid": tid, "ts": ts_us}
+        if phase == "f":
+            ev["bp"] = "e"       # bind to the enclosing slice's end point
+        self.events.append(ev)
+
     # -- wall clock ------------------------------------------------------------
     def now_us(self) -> float:
         """Microseconds since tracer construction (wall clock)."""

@@ -594,6 +594,59 @@ class FleetServer:
                     piped.instances[0].steady_interval_cycles()))
         return mon
 
+    def profile_snapshot(self, *, events: int = 1,
+                         levers: bool = True) -> dict:
+        """Per-tenant critical-path blame profile of the deployed designs.
+
+        Runs the Tier-S simulator once per tenant on its cached §5.2
+        design, walks back each event's critical path
+        (:func:`repro.obs.profile.profile_run`), and compares the Tier-S
+        blame shares against the Tier-A analytic decomposition
+        (:func:`repro.core.perfmodel.latency_blame`) through this fleet's
+        drift monitor under the ``model.blame.*`` metric family — so one
+        call both answers "where do the cycles go?" and refreshes the
+        blame side of the drift gate.
+
+        Returns ``{tenant: {"blame_cycles", "blame_shares", "dominant",
+        "blame_mape", "top_lever"}}`` where ``top_lever`` (with
+        ``levers=True``) is the best single what-if — the overhead
+        category whose halving projects the largest causal speedup.
+        """
+        from repro.core.perfmodel import latency_blame
+        from repro.obs import profile as obsprofile
+        from repro.sim.run import SimConfig, simulate_placement
+
+        out: Dict[str, dict] = {}
+        for name, t in self.tenants.items():
+            best = self._design(name)
+            if best is None:
+                continue
+            res = simulate_placement(
+                best.placement, tenant=name,
+                config=SimConfig(events=events, trace=False))
+            prof = obsprofile.profile_run(res)
+            obsprofile.feed_blame_drift(
+                self.drift, name, latency_blame(best.placement),
+                prof.blame_cycles())
+            cycles = prof.blame_cycles()
+            shares = prof.blame_shares()
+            dominant = (max(shares.items(), key=lambda kv: abs(kv[1]))
+                        if shares else None)
+            apes = [e.ape for e in self.drift.entries()
+                    if e.key == name and e.metric.startswith("model.blame.")
+                    and e.ape is not None]
+            entry: Dict[str, object] = {
+                "blame_cycles": cycles,
+                "blame_shares": shares,
+                "dominant": dominant,
+                "blame_mape": sum(apes) / len(apes) if apes else None,
+            }
+            if levers:
+                top = obsprofile.top_levers(res)
+                entry["top_lever"] = top[0].as_dict() if top else None
+            out[name] = entry
+        return out
+
     def telemetry_snapshot(self, *, drift: bool = True,
                            tier_s: bool = True) -> dict:
         """One JSON-ready bundle: metrics snapshot + serving summary + drift."""

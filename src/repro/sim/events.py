@@ -16,6 +16,14 @@ PLIO. :mod:`repro.sim.array` instantiates the resources and
     tasks and raises :class:`DeadlockError` when the event heap drains with
     tasks still pending — the property tests assert this never happens for
     valid placements.
+
+Causality recording: every task remembers which edge *released* it —
+``Task.cause`` is the last-finishing predecessor (the dependency edge
+that dropped ``_npreds`` to zero) and ``Task.granted_by`` is the task
+whose resource release promoted it out of a FIFO queue (None when the
+grant was immediate). Both are O(1) per task, so a completed run carries
+its full causality DAG and :mod:`repro.obs.profile` can walk the exact
+per-event critical path backwards without re-running the schedule.
 """
 from __future__ import annotations
 
@@ -103,11 +111,13 @@ class Resource:
             self._queue.append(task)
             self.max_queued = max(self.max_queued, len(self._queue))
 
-    def release(self) -> None:
+    def release(self, by: Optional["Task"] = None) -> None:
         self._busy -= 1
         if self._queue:
             self._busy += 1
-            self._queue.popleft()._begin()
+            nxt = self._queue.popleft()
+            nxt.granted_by = by
+            nxt._begin()
 
     @property
     def busy_cycles(self) -> float:
@@ -133,7 +143,7 @@ class Task:
 
     __slots__ = ("graph", "name", "duration", "resource", "delay", "bytes",
                  "pid", "tid", "cat", "args", "start", "end", "requested_at",
-                 "_npreds", "_succs", "record")
+                 "cause", "granted_by", "_npreds", "_succs", "record")
 
     def __init__(self, graph: "TaskGraph", name: str, *, duration: float = 0.0,
                  resource: Optional[Resource] = None, delay: float = 0.0,
@@ -156,6 +166,12 @@ class Task:
         self.start: Optional[float] = None
         self.end: Optional[float] = None
         self.requested_at: Optional[float] = None
+        #: The last-finishing predecessor — the dependency edge that
+        #: released this task (None for DAG roots).
+        self.cause: Optional["Task"] = None
+        #: The task whose resource release promoted this one out of the
+        #: FIFO wait queue (None when the grant was immediate).
+        self.granted_by: Optional["Task"] = None
         self._npreds = 0
         self._succs: List["Task"] = []
 
@@ -170,9 +186,10 @@ class Task:
         return self
 
     # -- engine callbacks ---------------------------------------------------
-    def _pred_done(self) -> None:
+    def _pred_done(self, pred: Optional["Task"] = None) -> None:
         self._npreds -= 1
         if self._npreds == 0:
+            self.cause = pred
             self.graph.sim.schedule(self.delay, self._request)
 
     def _request(self) -> None:
@@ -195,14 +212,14 @@ class Task:
         if self.resource is not None:
             self.resource.spans.append((self.name, self.start, self.end,
                                         self.bytes))
-            self.resource.release()
+            self.resource.release(self)
         if self.record and self.graph.trace is not None and self.duration > 0:
             self.graph.trace.span(self.pid, self.tid, self.name, self.start,
                                   self.end - self.start, cat=self.cat,
                                   args={**self.args, "bytes": self.bytes}
                                   if self.bytes else dict(self.args))
         for s in self._succs:
-            s._pred_done()
+            s._pred_done(self)
 
 
 class TaskGraph:

@@ -12,7 +12,12 @@ Tier-A decomposition of :func:`repro.core.perfmodel.end_to_end_cycles`:
 Durations come from the same calibrated Eq. (1)-(6) pieces the analytic
 model sums, so a single-tenant run reproduces ``end_to_end_cycles`` — the
 Fig. 9-style sim-vs-model report in ``benchmarks/sim_vs_model.py`` checks
-this. What the simulator *adds* is resources: shim columns are capacity-1
+this. Every priced task additionally carries its *blame decomposition* in
+``args["blame"]`` (and ``args["delay_blame"]`` for launch skews): the same
+Eq. (1)-(6) term split :func:`repro.core.perfmodel.latency_blame` sums
+analytically, attached per task so :mod:`repro.obs.profile` can walk the
+recorded causality DAG and attribute every cycle of the measured critical
+path to a paper overhead category. What the simulator *adds* is resources: shim columns are capacity-1
 servers shared by every co-resident tenant whose bounding box covers them,
 so multi-tenant ingest serializes and the measured events/sec fall below
 the congestion-free rate the Tier-A throughput model assumes.
@@ -386,6 +391,54 @@ def _split(nbytes: int, n: int) -> List[int]:
     return [base + (1 if i < rem else 0) for i in range(n)]
 
 
+def _span_blame(m, occ, lr: int, lc: int, s: float, d: float, *,
+                out_cascade: bool, p: OverheadParams,
+                ideal: bool) -> Dict[str, Dict[str, float]]:
+    """Blame annotations of one per-tile layer span (Eq. 4 decomposed).
+
+    ``blame`` splits the busy ``duration``; ``delay_blame`` splits the
+    launch skew ``delay``. Both reuse the same per-term helpers as the
+    Tier-A :func:`repro.core.perfmodel.latency_blame`, so summing the
+    annotations down the simulated critical path reproduces the analytic
+    decomposition — and scaling one category on the recorded graph
+    (:func:`repro.obs.profile.whatif`) projects the same schedule a
+    re-simulation under ``perfmodel.scale_overheads`` would produce.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    if m.layer.kind == "agg":
+        if ideal:
+            out["blame"] = {"compute": d}
+        elif s > 0 or (m.rows > 1 and occ.lj > 0):
+            # Skewed shared-memory chain: each tile owns one handoff, the
+            # launch skew is the upstream tiles' handoffs (both "sync").
+            out["blame"] = perfmodel.agg_blame(1, m.H1, m.W2, p=p,
+                                               dtype=m.dtype)
+            if s > 0:
+                out["delay_blame"] = {"sync": s}
+        else:
+            # Unskewed fallback (rows == 1 or degenerate dur): the span
+            # carries the whole A-AIE chain.
+            out["blame"] = perfmodel.agg_blame(m.A, m.H1, m.W2, p=p,
+                                               dtype=m.dtype)
+        return out
+    cascaded = m.B > 1
+    blame = perfmodel.mm_loop_blame(m.W1, n_loops=float(occ.njl),
+                                    cascaded=cascaded, p=p, dtype=m.dtype,
+                                    ideal=ideal)
+    if lc == m.cols - 1 and not ideal:
+        for k, v in perfmodel.mm_epilogue_blame(
+                m.H1, m.W2, out_cascade=out_cascade,
+                bias_relu=bool(m.layer.bias or m.layer.relu), p=p).items():
+            blame[k] = blame.get(k, 0.0) + v
+    out["blame"] = blame
+    if lc > 0:
+        # FIFO-fill skew: lc whole j-loop periods of the upstream columns.
+        out["delay_blame"] = perfmodel.mm_loop_blame(
+            m.W1, n_loops=float(lc), cascaded=cascaded, p=p, dtype=m.dtype,
+            ideal=ideal)
+    return out
+
+
 def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
                     *, tenant: str, replica: int, n_events: int,
                     p: OverheadParams, cfg: SimConfig,
@@ -442,7 +495,8 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
         if cfg.include_plio:
             ingest = [g.task(f"{ev}.load", resource=arr.shim(c, label),
                              duration=t_in, bytes=b, cat="ingest",
-                             args={"ev": ev}).after(root)
+                             args={"ev": ev, "tenant": tenant, "label": label,
+                                   "blame": {"shim_ingest": t_in}}).after(root)
                       for c, b in zip(cols, _split(in_bytes, len(cols)))]
             rec["ingest"] = ingest
             cur = g.task(f"{ev}.loaded", record=False).after(*ingest)
@@ -455,7 +509,10 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
             spans = [g.task(f"{ev}.{lname}",
                             resource=arr.tile(rect.r0 + lr, rect.c0 + lc),
                             delay=s, duration=d, cat="compute",
-                            args={"ev": ev}).after(cur)
+                            args={"ev": ev, "tenant": tenant, "label": label,
+                                  **_span_blame(m, occ, lr, lc, s, d,
+                                                out_cascade=out_cas, p=p,
+                                                ideal=cfg.ideal)}).after(cur)
                      for lr, lc, s, d in occ.spans]
             rec["layers"].append(spans)
             ldone = g.task(f"{ev}.{lname}.done", record=False).after(*spans)
@@ -468,13 +525,16 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
             edge = g.task(f"{ev}.{lname}>{ec.kind}",
                           resource=arr.edge(f"{label}.L{i}>L{i + 1}", ec.kind),
                           duration=ec.cycles, bytes=ec.data_bytes, cat="edge",
-                          args={"ev": ev}).after(ldone)
+                          args={"ev": ev, "tenant": tenant, "label": label,
+                                "blame": {f"comm_{ec.kind}": ec.cycles}}
+                          ).after(ldone)
             rec["edges"].append((ec.kind, edge, ec.data_bytes))
             cur = edge
         if cfg.include_plio:
             egress = [g.task(f"{ev}.store", resource=arr.shim(c, label),
                              duration=t_out, bytes=b, cat="egress",
-                             args={"ev": ev}).after(cur)
+                             args={"ev": ev, "tenant": tenant, "label": label,
+                                   "blame": {"shim_egress": t_out}}).after(cur)
                       for c, b in zip(cols, _split(out_bytes, len(cols)))]
             rec["egress"] = egress
             cur = g.task(f"{ev}.done", record=False).after(*egress)

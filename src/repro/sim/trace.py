@@ -41,3 +41,9 @@ class ChromeTrace(Tracer):
     def instant(self, pid_name: str, tid_name: str, name: str,
                 t_cycles: float) -> None:
         self.instant_us(pid_name, tid_name, name, _us(t_cycles))
+
+    def flow(self, pid_name: str, tid_name: str, name: str, t_cycles: float,
+             *, id: int, phase: str, cat: str = "flow") -> None:
+        """Cycle-clock flow endpoint (see :meth:`Tracer.flow_us`)."""
+        self.flow_us(pid_name, tid_name, name, _us(t_cycles), id=id,
+                     phase=phase, cat=cat)

@@ -1,0 +1,95 @@
+"""launch.simulate CLI contract: the --jitter deprecation (messages pinned
+verbatim, behavioural equivalence with --arrivals, removal timeline in the
+--help epilog) and the blame-profile flags."""
+import json
+import sys
+
+import pytest
+
+from repro.launch import simulate as simulate_cli
+
+DEPRECATED_STANDALONE = ("[sim] note: --jitter is deprecated; prefer "
+                         "--arrivals (e.g. poisson:<eps>)")
+DEPRECATED_IGNORED = ("[sim] note: --jitter is deprecated and ignored when "
+                      "--arrivals is given")
+
+
+def _run(monkeypatch, capsys, argv):
+    monkeypatch.setattr(sys, "argv", ["simulate"] + argv)
+    simulate_cli.main()
+    return capsys.readouterr().out
+
+
+class TestJitterDeprecation:
+    def test_standalone_jitter_warns_verbatim(self, monkeypatch, capsys,
+                                              tmp_path):
+        out = _run(monkeypatch, capsys,
+                   ["--model", "jsc-m", "--events", "2", "--jitter", "32",
+                    "--trace", str(tmp_path / "t.json")])
+        assert DEPRECATED_STANDALONE in out
+        assert DEPRECATED_IGNORED not in out
+
+    def test_no_warning_without_jitter(self, monkeypatch, capsys, tmp_path):
+        out = _run(monkeypatch, capsys,
+                   ["--model", "jsc-m", "--events", "2",
+                    "--trace", str(tmp_path / "t.json")])
+        assert "--jitter is deprecated" not in out
+
+    def test_jitter_with_arrivals_is_warned_and_ignored(self, monkeypatch,
+                                                        capsys, tmp_path):
+        """With --arrivals, --jitter must change nothing but the warning:
+        the rest of the output (latency, sojourn, invariants) is
+        line-for-line identical to the run without it."""
+        base = ["--model", "jsc-m", "--events", "4", "--seed", "3",
+                "--pipeline-depth", "2", "--arrivals", "poisson:1000000",
+                "--trace", str(tmp_path / "t.json")]
+        out_plain = _run(monkeypatch, capsys, base)
+        out_jitter = _run(monkeypatch, capsys, base + ["--jitter", "64"])
+        assert DEPRECATED_IGNORED in out_jitter
+        assert DEPRECATED_IGNORED not in out_plain
+        stripped = [ln for ln in out_jitter.splitlines()
+                    if ln != DEPRECATED_IGNORED]
+        assert stripped == out_plain.splitlines()
+
+    def test_help_epilog_documents_removal_timeline(self, monkeypatch,
+                                                    capsys):
+        monkeypatch.setattr(sys, "argv", ["simulate", "--help"])
+        with pytest.raises(SystemExit) as exc:
+            simulate_cli.main()
+        assert exc.value.code == 0
+        out = capsys.readouterr().out
+        assert "deprecations:" in out
+        assert "--jitter" in out
+        assert "releases after this deprecation" in out
+        assert "poisson:<eps>" in out
+
+
+class TestProfileFlags:
+    def test_profile_artifacts_and_gate(self, monkeypatch, capsys, tmp_path):
+        prof_path = tmp_path / "profile.json"
+        flame_path = tmp_path / "flame.txt"
+        out = _run(monkeypatch, capsys,
+                   ["--model", "jsc-m", "--events", "2",
+                    "--profile-out", str(prof_path),
+                    "--flame-out", str(flame_path),
+                    "--blame-gate", "0.05",
+                    "--trace", str(tmp_path / "t.json")])
+        assert "blame drift gate: PASS" in out
+        prof = json.loads(prof_path.read_text())
+        assert prof["blame_cycles"]
+        assert prof["conservation_errors"] == []
+        assert prof["blame_mape"] <= 0.05
+        assert prof["top_levers"][0]["speedup"] >= 1.0
+        assert flame_path.read_text().strip()
+        trace = json.loads((tmp_path / "t.json").read_text())
+        assert any(e["ph"] in ("s", "f") for e in trace["traceEvents"])
+
+    def test_failing_gate_exits_nonzero(self, monkeypatch, capsys, tmp_path):
+        monkeypatch.setattr(
+            sys, "argv",
+            ["simulate", "--model", "jsc-m", "--events", "2",
+             "--blame-gate", "-1.0",
+             "--trace", str(tmp_path / "t.json")])
+        with pytest.raises(SystemExit) as exc:
+            simulate_cli.main()
+        assert "blame drift gate FAILED" in str(exc.value)

@@ -1,0 +1,268 @@
+"""Critical-path blame attribution (repro.obs.profile): per-event blame
+conserves to the measured sojourn, the walked-back Tier-S shares agree
+with the Tier-A analytic decomposition, causal what-ifs are validated
+against actual re-simulation, and the surfaces that consume the profile
+(flow arrows, folded stacks, metrics, DSE explanations, fleet snapshot)
+stay well-formed."""
+import math
+import re
+
+import pytest
+
+from repro.core import dse, perfmodel, tenancy
+from repro.core.layerspec import (LayerSpec, ModelSpec, REALISTIC_WORKLOADS,
+                                  deepsets_32)
+from repro.core.mapping import Mapping, ModelMapping
+from repro.core.perfmodel_batched import DesignBatch, latency_blame_v
+from repro.core.placement import place
+from repro.obs import profile as obsprofile
+from repro.obs.drift import DriftMonitor
+from repro.obs.metrics import MetricsRegistry
+from repro.sim import run as simrun
+
+
+def _table2_placements():
+    for (m, k, n) in perfmodel.TABLE2_NS:
+        layer = LayerSpec(kind="mm", M=m, K=k, N=n, name=f"{m}x{k}x{n}")
+        spec = ModelSpec((layer,), name=f"t2-{m}x{k}x{n}")
+        mm = ModelMapping(model=spec, mappings=(Mapping(1, 1, 1, layer),))
+        yield spec.name, place(mm)
+
+
+def _winner_placements():
+    for name, fn in REALISTIC_WORKLOADS.items():
+        d = dse.explore(fn())
+        if d is not None:
+            yield name, d.placement
+
+
+@pytest.fixture(scope="module")
+def profiled():
+    """(name, placement, single-event SimResult, RunProfile) for every
+    Table 2 shape and every Table 3 DSE winner."""
+    out = []
+    for name, pl in [*_table2_placements(), *_winner_placements()]:
+        res = simrun.simulate_placement(
+            pl, tenant=name, config=simrun.SimConfig(trace=False))
+        out.append((name, pl, res, obsprofile.profile_run(res)))
+    return out
+
+
+class TestConservation:
+    def test_blame_sums_to_sojourn(self, profiled):
+        for name, _, _, prof in profiled:
+            assert prof.check() == [], name
+            for ep in prof.events:
+                assert abs(ep.conservation_error()) <= 1e-6
+
+    def test_single_event_critical_path_is_exact(self, profiled):
+        """One event, one instance: the walked-back critical path IS the
+        measured latency and the whole makespan — equality, not approx."""
+        for name, _, res, prof in profiled:
+            ep = prof.events[0]
+            assert ep.critical_path_cycles == res.latency_cycles, name
+            assert ep.sojourn_cycles == res.latency_cycles, name
+
+    def test_critical_path_matches_analytic_total(self, profiled):
+        """Serial single tenant: sim == analytic, so the attributed path
+        must also reproduce perfmodel.end_to_end_cycles."""
+        for name, pl, _, prof in profiled:
+            ana = perfmodel.end_to_end_cycles(pl).total
+            assert math.isclose(prof.events[0].critical_path_cycles, ana,
+                                rel_tol=1e-9), name
+
+    def test_no_emergent_waits_when_uncontended(self, profiled):
+        for _, _, _, prof in profiled:
+            assert not any(obsprofile.is_wait_category(c)
+                           for c in prof.blame_cycles())
+
+
+class TestTierAAgreement:
+    def test_latency_blame_sums_to_total(self, profiled):
+        for name, pl, _, _ in profiled:
+            blame = perfmodel.latency_blame(pl)
+            ana = perfmodel.end_to_end_cycles(pl).total
+            assert math.isclose(math.fsum(blame.values()), ana,
+                                rel_tol=1e-9), name
+            assert set(blame) == set(perfmodel.BLAME_CATEGORIES)
+
+    def test_blame_drift_gate(self, profiled):
+        """Tier-A analytic shares vs walked-back Tier-S shares: the
+        model.blame.* family MAPE must hold the 5% CI gate."""
+        mon = DriftMonitor()
+        for name, pl, _, prof in profiled:
+            obsprofile.feed_blame_drift(mon, name,
+                                        perfmodel.latency_blame(pl),
+                                        prof.blame_cycles())
+        mape = mon.family_mape("model.blame.")
+        assert mape is not None and mape <= 0.05
+        assert all(m.startswith("model.blame.")
+                   for m in mon.metrics())
+
+    def test_batched_twin_parity(self):
+        """latency_blame_v mirrors the scalar decomposition bit-exactly
+        on a DSE frontier (same op order, so ==, not approx)."""
+        front = dse.search(deepsets_32())
+        batch = DesignBatch.from_placements([d.placement for d in front])
+        vec = latency_blame_v(batch)
+        assert set(vec) == set(perfmodel.BLAME_CATEGORIES)
+        for i, d in enumerate(front):
+            scalar = perfmodel.latency_blame(d.placement)
+            for cat in perfmodel.BLAME_CATEGORIES:
+                assert vec[cat][i] == scalar[cat], (d, cat)
+
+
+class TestWhatIf:
+    def test_factor_one_is_exact_noop(self, profiled):
+        name, pl, res, prof = profiled[-1]
+        for cat in obsprofile.annotated_categories(res):
+            proj = obsprofile.whatif(res, cat, 1.0)
+            assert proj.projected_sojourn_cycles == proj.base_sojourn_cycles
+            assert proj.speedup == 1.0
+
+    def test_projection_matches_resimulation(self, profiled):
+        """The documented what-if: halving the VLIW prologue constants.
+        The causal replay's projected speedup must match an actual
+        re-simulation under scale_overheads within 2%."""
+        name, pl, res, _ = profiled[-1]
+        proj = obsprofile.whatif(res, "prologue", 0.5)
+        p2 = perfmodel.scale_overheads(perfmodel.OVERHEADS, "prologue", 0.5)
+        res2 = simrun.simulate_placement(
+            pl, tenant=name, config=simrun.SimConfig(trace=False), p=p2)
+        actual = res.latency_cycles / res2.latency_cycles
+        assert actual > 1.0
+        assert abs(proj.speedup - actual) / actual <= 0.02
+
+    def test_top_levers_ranked(self, profiled):
+        _, _, res, _ = profiled[-1]
+        levers = obsprofile.top_levers(res)
+        assert levers
+        speedups = [lv.speedup for lv in levers]
+        assert speedups == sorted(speedups, reverse=True)
+        assert all(lv.speedup >= 1.0 - 1e-9 for lv in levers)
+
+    def test_rejects_bad_inputs(self, profiled):
+        _, _, res, _ = profiled[-1]
+        with pytest.raises(ValueError):
+            obsprofile.whatif(res, "not-a-category", 0.5)
+        with pytest.raises(ValueError):
+            obsprofile.whatif(res, "compute", -0.1)
+        with pytest.raises(ValueError):
+            perfmodel.scale_overheads(perfmodel.OVERHEADS, "compute", 0.5)
+
+
+class TestContendedBlame:
+    def test_xtenant_blame_names_the_blocker(self):
+        """A packing whose replicas stack on shared shim columns must
+        surface cross-tenant waits, keyed by the blocking instance's
+        label — and still conserve every event's sojourn."""
+        design = dse.explore(deepsets_32())
+        sched = tenancy.pack_max_replicas(design)
+        assert sched is not None and len(sched.instances) >= 2
+        assert sched.shim_contention(pipelined=False).shared_cols > 0
+        res = simrun.simulate_schedule(
+            sched, config=simrun.SimConfig(events=4, trace=False))
+        prof = obsprofile.profile_run(res)
+        assert prof.check() == []
+        labels = {i.label for i in res.instances}
+        waits = {c: v for c, v in prof.blame_cycles().items()
+                 if obsprofile.is_wait_category(c)}
+        xten = {c for c in waits if c.startswith("xtenant:")}
+        assert xten, "shared shim columns must produce cross-tenant blame"
+        assert all(c.split(":", 1)[1] in labels for c in xten)
+        # nobody blames themselves across the tenant boundary
+        for ep in prof.events:
+            for c in ep.blame():
+                if c.startswith("xtenant:"):
+                    assert c.split(":", 1)[1] != ep.label
+
+    def test_pipelined_run_surfaces_queue_wait(self):
+        design = dse.explore(deepsets_32())
+        res = simrun.simulate_placement(
+            design.placement, tenant="ds32",
+            config=simrun.SimConfig(events=8, pipeline_depth=4,
+                                    trace=False))
+        prof = obsprofile.profile_run(res)
+        assert prof.check() == []
+        assert prof.blame_cycles().get("queue_wait", 0.0) > 0
+
+
+class TestSurfaces:
+    def test_flow_events_land_in_trace(self):
+        design = dse.explore(deepsets_32())
+        res = simrun.simulate_placement(design.placement, tenant="ds32")
+        prof = obsprofile.profile_run(res)
+        n = obsprofile.add_flow_events(prof, res.trace)
+        assert n > 0
+        flows = [e for e in res.trace.events if e["ph"] in ("s", "f")]
+        assert len(flows) == n
+        starts = [e for e in flows if e["ph"] == "s"]
+        ends = [e for e in flows if e["ph"] == "f"]
+        assert len(starts) == len(ends)
+        assert all(e["bp"] == "e" for e in ends)
+        assert {e["id"] for e in starts} == {e["id"] for e in ends}
+
+    def test_folded_stack_format(self, profiled):
+        _, _, _, prof = profiled[-1]
+        lines = prof.folded().strip().splitlines()
+        assert lines
+        for ln in lines:
+            assert re.fullmatch(r"[^;]+;[^;]+;[^ ;]+ \d+", ln), ln
+
+    def test_export_metrics_gauges(self, profiled):
+        _, _, _, prof = profiled[-1]
+        reg = prof.export_metrics(MetricsRegistry())
+        names = {g["name"] for g in reg.snapshot()["gauges"]}
+        assert "profile.blame.cycles" in names
+        assert "profile.blame.share" in names
+
+    def test_as_dict_roundtrips_through_json(self, profiled):
+        import json
+        _, _, _, prof = profiled[-1]
+        d = json.loads(json.dumps(prof.as_dict()))
+        assert d["blame_cycles"]
+        assert d["per_event"][0]["critical_path_cycles"] > 0
+        assert d["conservation_errors"] == []
+
+
+class TestDSEExplain:
+    def test_explain_annotates_frontier(self):
+        front = dse.search(deepsets_32(), explain=True)
+        for d in front:
+            assert d.blame is not None
+            cat, share = d.dominant_blame
+            assert cat in perfmodel.BLAME_CATEGORIES
+            assert 0 < abs(share) <= 1.0
+            assert "dominated by" in d.why_wins()
+            assert d.why_wins() in d.summary()
+
+    def test_without_explain_points_at_the_flag(self):
+        front = dse.search(deepsets_32())
+        assert front[0].blame is None
+        assert "explain=True" in front[0].why_wins()
+
+
+class TestFleetProfileSnapshot:
+    def test_snapshot_gates_and_ranks(self):
+        jax = pytest.importorskip("jax")
+        from repro.data import JetConfig, jet_batch
+        from repro.models import mlp as mlp_lib
+        from repro.serve.fleet import FleetServer, TenantSpec
+
+        jc = JetConfig(n_particles=16, n_features=8, n_classes=5, seed=0)
+        params = mlp_lib.mlp_init(jax.random.key(0), 8, [16, 16, 5])
+        xcal, _ = jet_batch(jc, 64, 1)
+        q = mlp_lib.to_quantized(params, xcal)
+        fleet = FleetServer([TenantSpec(name="ds32", qmlp=q, mode="ref",
+                                        replicas=1,
+                                        model_spec=deepsets_32())])
+        try:
+            snap = fleet.profile_snapshot()
+        finally:
+            fleet.close()
+        t = snap["ds32"]
+        assert t["blame_mape"] is not None and t["blame_mape"] <= 0.05
+        assert t["dominant"] is not None
+        assert t["top_lever"]["speedup"] >= 1.0
+        assert math.isclose(math.fsum(t["blame_shares"].values()), 1.0,
+                            rel_tol=1e-9)

@@ -1,0 +1,69 @@
+"""Property-based tests of critical-path blame attribution (hypothesis):
+for whatever valid placement the DSE produces, the walked-back blame must
+sum to the measured sojourn, a single-event critical path must equal the
+task graph's makespan exactly, and the identity what-if
+(``whatif(category, 1.0)``) must reconstruct the recorded schedule
+bit-for-bit."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dse
+from repro.core.layerspec import LayerSpec, ModelSpec
+from repro.obs import profile as obsprofile
+from repro.sim import run as simrun
+
+
+@st.composite
+def mlp_chains(draw):
+    """Random MM chains with chained shapes (layer i's N == layer i+1's K)."""
+    n_layers = draw(st.integers(1, 5))
+    m = draw(st.sampled_from([8, 16, 32, 64]))
+    dims = [draw(st.sampled_from([5, 8, 16, 21, 32, 64]))
+            for _ in range(n_layers + 1)]
+    layers = tuple(
+        LayerSpec(kind="mm", M=m, K=dims[i], N=dims[i + 1],
+                  bias=draw(st.booleans()), relu=i < n_layers - 1,
+                  name=f"l{i}")
+        for i in range(n_layers))
+    return ModelSpec(layers, name="rand")
+
+
+class TestBlameProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(model=mlp_chains(), events=st.integers(1, 3))
+    def test_blame_conserves_per_event(self, model, events):
+        r = dse.explore(model)
+        if r is None:
+            return                      # infeasible chains are allowed
+        res = simrun.simulate_placement(
+            r.placement, config=simrun.SimConfig(events=events, trace=False))
+        prof = obsprofile.profile_run(res)
+        assert len(prof.events) == events
+        assert prof.check() == []
+
+    @settings(max_examples=12, deadline=None)
+    @given(model=mlp_chains())
+    def test_single_event_critical_path_is_makespan(self, model):
+        r = dse.explore(model)
+        if r is None:
+            return
+        res = simrun.simulate_placement(
+            r.placement, config=simrun.SimConfig(trace=False))
+        prof = obsprofile.profile_run(res)
+        ep = prof.events[0]
+        # exact equality: the single event's path IS the whole schedule
+        assert ep.critical_path_cycles == res.latency_cycles
+        assert ep.sojourn_cycles == res.makespan_cycles
+
+    @settings(max_examples=10, deadline=None)
+    @given(model=mlp_chains(), events=st.integers(1, 3))
+    def test_identity_whatif_is_exact_noop(self, model, events):
+        r = dse.explore(model)
+        if r is None:
+            return
+        res = simrun.simulate_placement(
+            r.placement, config=simrun.SimConfig(events=events, trace=False))
+        for cat in obsprofile.annotated_categories(res):
+            proj = obsprofile.whatif(res, cat, 1.0)
+            assert proj.projected_sojourn_cycles == proj.base_sojourn_cycles
+            assert proj.projected_makespan_cycles == proj.base_makespan_cycles
+            assert proj.speedup == 1.0
