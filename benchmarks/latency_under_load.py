@@ -21,7 +21,10 @@ end-to-end number. Two artifacts come out:
      collapsed model reproduces the DES exactly (0.00%).
 
 Artifacts: ``benchmarks/out/latency_under_load.json``. ``--smoke`` trims
-to Deepsets-32 and one validated utilization for CI.
+to Deepsets-32 and one validated utilization for CI. ``--engine`` picks
+the Tier-S engine for the validation runs; the default ``auto`` replays
+the compiled fast path (:mod:`repro.sim.fastpath`), which is bit-exact
+with the DES on sojourn cycles, so the gate semantics are unchanged.
 """
 from __future__ import annotations
 
@@ -91,8 +94,15 @@ def _curve_section(name: str, pt: dict) -> dict:
 
 
 def _validate_section(name: str, pt: dict, mon: DriftMonitor, *,
-                      rhos, events: int, seed: int) -> list:
-    """Same-trace collapsed-model vs DES sojourn comparison."""
+                      rhos, events: int, seed: int,
+                      engine: str = "auto") -> list:
+    """Same-trace collapsed-model vs Tier-S sojourn comparison.
+
+    ``engine`` selects the Tier-S engine (``repro.sim.run.simulate_placement``
+    seam): the default ``auto`` replays the compiled fast path — bit-exact
+    with the DES on sojourn cycles, so the drift gate is unchanged while
+    the bench stops being the CI wall-clock bottleneck.
+    """
     rows = []
     for rho in rhos:
         rate = rho * pt["capacity_eps"]
@@ -108,7 +118,8 @@ def _validate_section(name: str, pt: dict, mon: DriftMonitor, *,
             pt["design"].placement, tenant=name,
             config=simrun.SimConfig(events=events, pipeline_depth=events,
                                     arrivals=spec, trace=False, seed=seed,
-                                    max_events=200_000_000))
+                                    max_events=200_000_000),
+            engine=engine)
         sim = res.sojourn_summary()
         key = f"{name}@rho{rho:g}"
         for stat in ("mean_ns", "p99_ns"):
@@ -128,7 +139,7 @@ def _validate_section(name: str, pt: dict, mon: DriftMonitor, *,
 
 
 def main(*, smoke: bool = False, seed: int = 0,
-         events: int = 3000) -> dict:
+         events: int = 3000, engine: str = "auto") -> dict:
     names = ["Deepsets-32"] if smoke else ["Deepsets-32", "Deepsets-64",
                                            "JSC-M", "JSC-XL"]
     rhos = (0.7,) if smoke else VALIDATE_RHOS
@@ -142,7 +153,8 @@ def main(*, smoke: bool = False, seed: int = 0,
         sec = _curve_section(name, pt)
         print(f"== {name}: same-trace DES validation ==")
         sec["validation"] = _validate_section(name, pt, mon, rhos=rhos,
-                                              events=events, seed=seed)
+                                              events=events, seed=seed,
+                                              engine=engine)
         report["models"][name] = sec
     report["drift"] = mon.summary(flag_threshold=GATE)
     worst = max((d["mape"] for d in report["drift"].values()
@@ -174,6 +186,10 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--events", type=int, default=3000,
                     help="arrival-trace length per validated utilization")
+    ap.add_argument("--engine", choices=("des", "auto", "fast"),
+                    default="auto",
+                    help="Tier-S engine for the validation runs (auto = "
+                         "compiled fast path, bit-exact with the DES)")
     a = ap.parse_args()
-    res = main(smoke=a.smoke, seed=a.seed, events=a.events)
+    res = main(smoke=a.smoke, seed=a.seed, events=a.events, engine=a.engine)
     sys.exit(0 if res["acceptance_pass"] else 1)

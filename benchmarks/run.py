@@ -3,9 +3,12 @@ TPU benches. ``python -m benchmarks.run [name ...]`` runs all (or selected)
 and prints a summary of the key derived quantities per benchmark.
 
 ``--history`` additionally persists each benchmark's headline scalars to
-``BENCH_<name>.json`` at the repo root (plus git rev and date) and warns
-when a scalar moved more than 10% against the committed baseline — the
-lightweight regression ledger the CI diff surfaces in review.
+``BENCH_<name>.json`` at the repo root (plus git rev, date, and wall
+``seconds``) and warns when a scalar moved more than 10% against the
+committed baseline — the lightweight regression ledger the CI diff
+surfaces in review. Wall-time drift beyond 25% is also flagged, but
+always warn-only (clocks are machine-dependent; ``--strict-history``
+never fails on ``seconds``).
 """
 from __future__ import annotations
 
@@ -17,8 +20,9 @@ import time
 
 from . import (dse_quality, dse_throughput, fig9_perfmodel_error,
                fig10_synthetic_mlp, fig11_realistic, latency_under_load,
-               roofline_report, sim_vs_model, table2_single_aie,
-               table4_global_agg, throughput_pareto, tpu_cascade_fusion)
+               roofline_report, sim_fastpath, sim_vs_model,
+               table2_single_aie, table4_global_agg, throughput_pareto,
+               tpu_cascade_fusion)
 
 BENCHES = {
     "table2_single_aie": table2_single_aie.main,
@@ -33,12 +37,18 @@ BENCHES = {
     "throughput_pareto": throughput_pareto.main,
     "pipelined_throughput": throughput_pareto.pipelined_headline,
     "sim_vs_model": sim_vs_model.main,
+    "sim_fastpath": sim_fastpath.main,
     "latency_under_load": latency_under_load.main,
 }
 
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 REGRESSION_WARN = 0.10
+#: Wall-time drift threshold. Always warn-only — wall clocks are noisy
+#: and machine-dependent, so ``--strict-history`` never fails on them —
+#: but the ledger makes engine-level slowdowns (or speedups, e.g. the
+#: sim fast path) visible in review.
+WALL_WARN = 0.25
 
 
 def _git_rev() -> str:
@@ -63,6 +73,14 @@ def _update_history(name: str, res: dict, dt: float) -> list:
     if os.path.exists(path):
         with open(path) as f:
             prior = json.load(f)
+        old_dt = prior.get("seconds")
+        if isinstance(old_dt, (int, float)) and old_dt > 0 and dt > 0:
+            wall_change = abs(dt - old_dt) / old_dt
+            if wall_change > WALL_WARN:
+                print(f"[bench] NOTE {name}.seconds: {old_dt:.1f}s -> "
+                      f"{dt:.1f}s ({100 * wall_change:.0f}% wall-time "
+                      f"change vs baseline {prior.get('git_rev', '?')}; "
+                      f"warn-only)")
         for k, new in scalars.items():
             old = prior.get("results", {}).get(k)
             if not isinstance(old, (int, float)) or old == 0:

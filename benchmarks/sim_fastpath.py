@@ -1,0 +1,226 @@
+"""Compiled fast-path vs DES: bit-exact parity and replay-throughput gates.
+
+Two sections:
+
+  1. **Parity** — the fast path must reproduce the DES *bit-exactly*
+     (``==`` on every per-event root/completion/arrival cycle, makespan,
+     engine event count, latency, and sojourn summaries — no tolerance):
+     every Table 2 single-AIE shape, the Table 3 DSE winners (serial and
+     jittered), a contended multi-tenant packing (serial and pipelined),
+     pipelined ``depth > 1`` single instances, and open-loop Poisson
+     arrivals. Each scenario also pins the engine the fast path selects
+     (``sweep`` where FIFO order is static, ``heap`` otherwise).
+  2. **Throughput** — replayed engine events/sec vs the DES on the same
+     workloads. The sweep engine (the DSE-rescore / calibration /
+     latency-under-load hot path) is gated at >= 20x; the heap engine
+     (contended packings, pipelined-with-shim) is a faithful event-loop
+     transcription and is gated at a >= 3x floor. The chunked
+     ``score_batch`` rescorer is reported alongside.
+
+Artifacts: ``benchmarks/out/sim_fastpath.json``. ``--smoke`` trims event
+counts and the workload list for CI; the gates still apply.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.core import dse, layerspec, perfmodel, tenancy
+from repro.core.layerspec import LayerSpec, ModelSpec
+from repro.core.mapping import Mapping, ModelMapping
+from repro.core.placement import place
+from repro.serve import workload
+from repro.sim import fastpath, run as simrun
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+OUT_JSON = os.path.join(OUT_DIR, "sim_fastpath.json")
+
+GATE_SWEEP = 20.0   # x over the DES on sweep-engine scenarios
+GATE_HEAP = 3.0     # x floor on heap-engine scenarios
+
+
+def _table2_placement(m: int, k: int, n: int):
+    layer = LayerSpec(kind="mm", M=m, K=k, N=n, name=f"{m}x{k}x{n}")
+    spec = ModelSpec((layer,), name=f"t2-{m}x{k}x{n}")
+    return place(ModelMapping(model=spec, mappings=(Mapping(1, 1, 1, layer),)))
+
+
+def _streams(res):
+    return [(i.label, i.root_cycles, i.completion_cycles, i.arrivals)
+            for i in res.instances]
+
+
+def _assert_parity(name: str, des, fast, expect_engine: str) -> dict:
+    ev_des = des.graph.sim.events_run
+    checks = {
+        "streams": _streams(des) == _streams(fast),
+        "makespan": des.makespan_cycles == fast.makespan_cycles,
+        "events_run": ev_des == fast.events_run,
+        "latency": des.latency_cycles == fast.latency_cycles,
+        "sojourn": des.sojourn_summary() == fast.sojourn_summary(),
+        "engine": fast.engine == expect_engine,
+    }
+    ok = all(checks.values())
+    print(f"  {name:38s} engine={fast.engine:5s} "
+          f"{'exact' if ok else 'MISMATCH ' + str(checks)}")
+    assert ok, f"{name}: fast path not bit-exact vs DES: {checks}"
+    return {"scenario": name, "engine": fast.engine, "events": ev_des}
+
+
+def _parity_section(names, seed: int) -> list:
+    rows = []
+
+    def run(name, pl=None, sched=None, expect="sweep", **kw):
+        cfg = simrun.SimConfig(trace=False, **kw)
+        if pl is not None:
+            des = simrun.simulate_placement(pl, config=cfg)
+            fast = simrun.simulate_placement(pl, config=cfg, engine="fast")
+        else:
+            des = simrun.simulate_schedule(sched, config=cfg)
+            fast = simrun.simulate_schedule(sched, config=cfg, engine="fast")
+        rows.append(_assert_parity(name, des, fast, expect))
+
+    for (m, k, n) in perfmodel.TABLE2_NS:
+        run(f"table2 {m}x{k}x{n}", pl=_table2_placement(m, k, n), events=3)
+    poisson = workload.ArrivalSpec(kind="poisson", rate_eps=2.0e6)
+    for name in names:
+        design = dse.explore(layerspec.REALISTIC_WORKLOADS[name]())
+        if design is None:
+            continue
+        pl = design.placement
+        run(f"{name} serial", pl=pl, events=4, seed=seed)
+        run(f"{name} jitter", pl=pl, events=5, seed=seed + 7,
+            jitter_cycles=64.0)
+        run(f"{name} pipelined d4", pl=pl, events=16, pipeline_depth=4,
+            expect="heap")
+        run(f"{name} openloop d1", pl=pl, events=60, arrivals=poisson,
+            seed=seed + 5)
+        run(f"{name} openloop d60", pl=pl, events=60, pipeline_depth=60,
+            arrivals=poisson, seed=seed + 5, expect="heap")
+    design = dse.explore(layerspec.deepsets_32())
+    sched = tenancy.pack_max_replicas(design, cap=4)
+    if sched is not None and len(sched.instances) >= 2:
+        run(f"packed x{len(sched.instances)} serial", sched=sched, events=4,
+            expect="heap")
+        run(f"packed x{len(sched.instances)} pipelined d4", sched=sched,
+            events=12, pipeline_depth=4, expect="heap")
+    return rows
+
+
+def _time_best(fn, repeats: int = 2) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _speed_row(name, engine_expected, gate, *, pl=None, sched=None,
+               **cfg_kw) -> dict:
+    cfg = simrun.SimConfig(trace=False, **cfg_kw)
+    if pl is not None:
+        des_fn = lambda: simrun.simulate_placement(pl, config=cfg)
+        fast_fn = lambda: simrun.simulate_placement(pl, config=cfg,
+                                                    engine="fast")
+    else:
+        des_fn = lambda: simrun.simulate_schedule(sched, config=cfg)
+        fast_fn = lambda: simrun.simulate_schedule(sched, config=cfg,
+                                                   engine="fast")
+    fast = fast_fn()
+    assert fast.engine == engine_expected, fast.engine
+    t_des = _time_best(des_fn)
+    t_fast = _time_best(fast_fn)
+    speedup = t_des / t_fast
+    events = fast.events_run
+    row = {"scenario": name, "engine": fast.engine, "events": events,
+           "des_s": t_des, "fast_s": t_fast, "speedup": speedup,
+           "des_eps": events / t_des, "fast_eps": events / t_fast,
+           "gate": gate, "gate_pass": speedup >= gate}
+    print(f"  {name:28s} engine={fast.engine:5s} ev={events:7d} "
+          f"des={t_des * 1e3:8.1f}ms fast={t_fast * 1e3:7.1f}ms "
+          f"{speedup:6.1f}x (gate >= {gate:.0f}x: "
+          f"{'PASS' if row['gate_pass'] else 'FAIL'})")
+    return row
+
+
+def _throughput_section(smoke: bool, seed: int) -> dict:
+    design = dse.explore(layerspec.deepsets_32())
+    pl = design.placement
+    sched = tenancy.pack_max_replicas(design, cap=4)
+    ev = 200 if smoke else 400
+    poisson = workload.ArrivalSpec(kind="poisson", rate_eps=2.0e6)
+    rows = [
+        _speed_row("serial replay", "sweep", GATE_SWEEP, pl=pl, events=ev,
+                   seed=seed),
+        _speed_row("openloop d1 replay", "sweep", GATE_SWEEP, pl=pl,
+                   events=ev, arrivals=poisson, seed=seed),
+        _speed_row("pipelined d8 replay", "heap", GATE_HEAP, pl=pl,
+                   events=ev, pipeline_depth=8, seed=seed),
+    ]
+    if sched is not None and len(sched.instances) >= 2:
+        rows.append(_speed_row("packed d4 replay", "heap", GATE_HEAP,
+                               sched=sched, events=ev // 4,
+                               pipeline_depth=4, seed=seed))
+
+    # Chunked batch rescore (dse.search hook) vs the legacy per-design DES
+    # closure. Report-only: the frontier is small, so wall times are noisy.
+    frontier = dse.search(layerspec.deepsets_32())
+    slow = simrun.rescorer(fast=False)
+    fast_sc = simrun.rescorer()
+    t_slow = _time_best(lambda: [slow(d) for d in frontier], 1)
+    t_fast = _time_best(lambda: fast_sc.score_batch(frontier), 1)
+    exact = ([slow(d) for d in frontier] == list(fast_sc.score_batch(frontier)))
+    assert exact, "score_batch diverged from the DES rescorer"
+    print(f"  rescore x{len(frontier):2d} designs          "
+          f"des={t_slow * 1e3:8.1f}ms fast={t_fast * 1e3:7.1f}ms "
+          f"{t_slow / max(t_fast, 1e-9):6.1f}x (bit-exact scores)")
+    return {"rows": rows,
+            "rescore": {"designs": len(frontier), "des_s": t_slow,
+                        "fast_s": t_fast,
+                        "speedup": t_slow / max(t_fast, 1e-9),
+                        "bit_exact": exact}}
+
+
+def main(*, smoke: bool = False, seed: int = 0) -> dict:
+    names = ["Deepsets-32"] if smoke else ["Deepsets-32", "Deepsets-64",
+                                           "JSC-M", "JSC-XL"]
+    print("== fast-path parity (bit-exact vs DES) ==")
+    parity = _parity_section(names, seed)
+    print("\n== replay throughput vs DES ==")
+    speed = _throughput_section(smoke, seed)
+    gates_pass = all(r["gate_pass"] for r in speed["rows"])
+    sweep_rows = [r for r in speed["rows"] if r["engine"] == "sweep"]
+    heap_rows = [r for r in speed["rows"] if r["engine"] == "heap"]
+    report = {"smoke": smoke, "seed": seed, "parity": parity,
+              "throughput": speed, "gate_sweep": GATE_SWEEP,
+              "gate_heap": GATE_HEAP, "gates_pass": gates_pass}
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"\nJSON report written to {OUT_JSON}")
+    print(f"parity scenarios exact: {len(parity)}; sweep gate >= "
+          f"{GATE_SWEEP:.0f}x, heap floor >= {GATE_HEAP:.0f}x -> "
+          f"{'PASS' if gates_pass else 'FAIL'}")
+    return {"parity_scenarios": len(parity),
+            "speedup_sweep_min": min(r["speedup"] for r in sweep_rows),
+            "speedup_heap_min": (min(r["speedup"] for r in heap_rows)
+                                 if heap_rows else 0.0),
+            "fast_eps_serial": speed["rows"][0]["fast_eps"],
+            "des_eps_serial": speed["rows"][0]["des_eps"],
+            "rescore_speedup": speed["rescore"]["speedup"],
+            "acceptance_pass": int(gates_pass)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset (Deepsets-32 only, shorter runs; "
+                         "parity and throughput gates still apply)")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    res = main(smoke=a.smoke, seed=a.seed)
+    sys.exit(0 if res["acceptance_pass"] else 1)

@@ -378,8 +378,14 @@ def fit(points: Sequence[SweepPoint], measured: Sequence[float], *,
 def run_calibration(families: Optional[Sequence[str]] = None, *,
                     smoke: bool = False, events: int = 1,
                     p: OverheadParams = OVERHEADS,
-                    registry=None, monitor=None):
+                    registry=None, monitor=None, engine: str = "fast"):
     """Sweep → simulate → fit → report, with telemetry and drift wiring.
+
+    ``engine`` selects the Tier-S measurement engine (default the compiled
+    replay fast path, :mod:`repro.sim.fastpath` — both the latencies and
+    the per-stage occupancies it measures are bit-exact with the DES, so
+    fits and drift entries are unchanged; pass ``"des"`` to force the full
+    event-driven simulator).
 
     Returns ``(report, registry, monitor, stage_drift_count)``:
 
@@ -401,7 +407,8 @@ def run_calibration(families: Optional[Sequence[str]] = None, *,
     points = default_sweep(families, smoke=smoke)
     cfg = SimConfig(events=events, trace=False)
     measured, stage_meas = sweep_latency_cycles(
-        [pt.placement for pt in points], p=p, config=cfg, stages=True)
+        [pt.placement for pt in points], p=p, config=cfg, stages=True,
+        engine=engine)
     report = fit(points, measured, stage_measured=stage_meas, base_params=p)
 
     for fam, ff in report.families.items():

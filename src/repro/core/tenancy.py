@@ -539,9 +539,14 @@ def throughput_frontier(model: ModelSpec, *,
                 from repro.sim.run import SimConfig, simulate_schedule
                 depth = _pipeline_depth_for(design) if pipelined else 1
                 events = max(sim_events, 3 * depth)
+                # engine="auto": the compiled replay fast path scores the
+                # packing bit-exactly (falling back to the DES only when a
+                # feature demands it), so the frontier sweep loses the DES
+                # construction cost per candidate schedule.
                 res = simulate_schedule(
                     sched, p=p, config=SimConfig(events=events, trace=False,
-                                                 pipeline_depth=depth))
+                                                 pipeline_depth=depth),
+                    engine="auto")
                 measured = (res.steady_throughput_eps() if pipelined
                             else res.throughput_eps())
                 if pipelined:

@@ -30,6 +30,13 @@ queueing included) statistics next to the closed-loop latency:
 latency (the dse.search rescore hook); ``--seed`` makes jittered and
 open-loop runs reproducible (the same grammar and seed produce the same
 arrival times here and in ``repro.launch.serve``).
+
+``--engine`` selects the Tier-S engine: ``des`` (default — full
+discrete-event simulation with Chrome trace and invariant checks),
+``fast`` (the compiled replay engine of :mod:`repro.sim.fastpath` —
+bit-exact completion cycles, no trace/profile artifacts), or ``auto``
+(fast when supported, DES otherwise). Latency numbers are identical by
+construction; choose ``des`` when you need the trace or blame profile.
 """
 from __future__ import annotations
 
@@ -61,19 +68,20 @@ def _simulate_single(args, cfg: simrun.SimConfig) -> simrun.SimResult:
         raise SystemExit(f"no feasible design for {args.model}")
     ana = design.latency.total
     res = simrun.simulate_placement(design.placement, tenant=spec.name,
-                                    config=cfg)
+                                    config=cfg, engine=args.engine)
+    is_des = isinstance(res, simrun.SimResult)
     sim = res.latency_cycles
     print(f"[sim] {spec.name}: {design.summary()}")
     if cfg.pipeline_depth <= 1:
         err = abs(sim - ana) / ana
+        ev = res.graph.sim.events_run if is_des else res.events_run
+        nt = len(res.graph.tasks) if is_des else res.n_tasks
         print(f"[sim] analytic {aie_arch.ns(ana):.1f} ns vs simulated "
               f"{aie_arch.ns(sim):.1f} ns ({100 * err:.2f}% error, "
-              f"{res.graph.sim.events_run} engine events, "
-              f"{len(res.graph.tasks)} tasks)")
+              f"{ev} engine events, {nt} tasks)")
     else:
         pb = perfmodel.pipeline_stages(design.placement)
         meas = res.instances[0].steady_interval_cycles()
-        bres, butil = res.bottleneck()
         if cfg.open_loop:
             # Completions pace the *arrivals* when offered rate < 1/II, so
             # the steady interval measures utilization, not the II.
@@ -90,11 +98,15 @@ def _simulate_single(args, cfg: simrun.SimConfig) -> simrun.SimResult:
                   f"(bottleneck stage {pb.bottleneck.name}) vs measured "
                   f"steady interval {aie_arch.ns(meas):.1f} ns "
                   f"({100 * err:.2f}% error)")
-        print(f"[sim] sustained {res.steady_throughput_eps() / 1e6:.3f} Meps "
-              f"vs serial 1/latency {1e3 / aie_arch.ns(ana):.3f} Meps "
-              f"({aie_arch.ns(ana) / aie_arch.ns(pb.interval):.2f}x from "
-              f"pipelining); busiest resource {bres} at "
-              f"{100 * butil:.0f}% utilization")
+        line = (f"[sim] sustained {res.steady_throughput_eps() / 1e6:.3f} "
+                f"Meps vs serial 1/latency {1e3 / aie_arch.ns(ana):.3f} Meps "
+                f"({aie_arch.ns(ana) / aie_arch.ns(pb.interval):.2f}x from "
+                f"pipelining)")
+        if is_des:
+            bres, butil = res.bottleneck()
+            line += (f"; busiest resource {bres} at "
+                     f"{100 * butil:.0f}% utilization")
+        print(line)
     return res
 
 
@@ -114,7 +126,7 @@ def _simulate_tenants(args, cfg: simrun.SimConfig) -> simrun.SimResult:
             raise SystemExit(f"{args.model} does not fit the array")
     pipelined = cfg.pipeline_depth > 1
     sc = sched.shim_contention(pipelined=pipelined)
-    res = simrun.simulate_schedule(sched, config=cfg)
+    res = simrun.simulate_schedule(sched, config=cfg, engine=args.engine)
     eps_sim = (res.steady_throughput_eps() if pipelined
                else res.throughput_eps())
     basis = (f"pipelined 1/II (depth {cfg.pipeline_depth})" if pipelined
@@ -126,8 +138,9 @@ def _simulate_tenants(args, cfg: simrun.SimConfig) -> simrun.SimResult:
           f"analytic contended {sc.eps_contended / 1e6:.2f} Meps | "
           f"simulated {eps_sim / 1e6:.2f} Meps "
           f"({100 * (1 - eps_sim / sc.eps_free):.1f}% sim penalty)")
-    print(f"[sim] shim queueing: {res.shim_wait_cycles():.0f} cycles total "
-          f"over {cfg.events} event(s)/instance")
+    if isinstance(res, simrun.SimResult):
+        print(f"[sim] shim queueing: {res.shim_wait_cycles():.0f} cycles "
+              f"total over {cfg.events} event(s)/instance")
     for inst in res.instances:
         print(f"[sim]   {inst.label}: mean "
               f"{aie_arch.ns(inst.mean_latency_cycles):.1f} ns/event, "
@@ -181,7 +194,17 @@ def main() -> None:
                          "fraction (e.g. 0.05)")
     ap.add_argument("--tier-s", action="store_true",
                     help="also re-rank the DSE frontier by simulated latency")
+    ap.add_argument("--engine", choices=("des", "auto", "fast"),
+                    default="des",
+                    help="Tier-S engine: des = full event simulation "
+                         "(Chrome trace, profile, invariants); fast = "
+                         "compiled replay (bit-exact cycles, no "
+                         "artifacts); auto = fast when supported")
     args = ap.parse_args()
+    if args.engine != "des" and (args.profile_out or args.flame_out
+                                 or args.blame_gate is not None):
+        ap.error("--profile-out/--flame-out/--blame-gate need the task "
+                 "graph: use --engine des")
     if args.mix:
         for n in args.mix.split(","):
             if n.strip() and n.strip() not in WORKLOADS:
@@ -208,7 +231,8 @@ def main() -> None:
     cfg = simrun.SimConfig(events=args.events, seed=args.seed,
                            jitter_cycles=0.0 if arrivals else args.jitter,
                            pipeline_depth=args.pipeline_depth,
-                           arrivals=arrivals)
+                           arrivals=arrivals,
+                           trace=args.engine == "des")
     multi = bool(args.mix) or args.replicas > 1
     res = (_simulate_tenants(args, cfg) if multi
            else _simulate_single(args, cfg))
@@ -295,19 +319,25 @@ def main() -> None:
                         "pipeline_depth": args.pipeline_depth})
         print(f"[sim] metrics: {len(reg.all())} series -> {args.metrics_out}")
 
-    path = args.trace or ("sim_trace_%s.json"
-                          % (args.mix.replace(",", "+") if args.mix
-                             else args.model))
-    res.trace.meta.update(seed=args.seed, events=args.events)
-    res.trace.save(path)
-    n_spans = len(res.trace.spans())
-    print(f"[sim] Chrome trace: {n_spans} spans -> {path} "
-          f"(open in chrome://tracing or ui.perfetto.dev)")
-    errs = simrun.invariant_errors(res)
-    if errs:
-        raise SystemExit("invariant violations:\n  " + "\n  ".join(errs[:10]))
-    print("[sim] invariants: clean "
-          "(bytes conserved, no double-booking, spans nested)")
+    if isinstance(res, simrun.SimResult) and res.trace is not None:
+        path = args.trace or ("sim_trace_%s.json"
+                              % (args.mix.replace(",", "+") if args.mix
+                                 else args.model))
+        res.trace.meta.update(seed=args.seed, events=args.events)
+        res.trace.save(path)
+        n_spans = len(res.trace.spans())
+        print(f"[sim] Chrome trace: {n_spans} spans -> {path} "
+              f"(open in chrome://tracing or ui.perfetto.dev)")
+        errs = simrun.invariant_errors(res)
+        if errs:
+            raise SystemExit("invariant violations:\n  "
+                             + "\n  ".join(errs[:10]))
+        print("[sim] invariants: clean "
+              "(bytes conserved, no double-booking, spans nested)")
+    else:
+        eng = getattr(res, "engine", "fast")
+        print(f"[sim] engine: compiled replay ({eng}) — bit-exact cycles; "
+              f"no trace/invariant artifacts (use --engine des for those)")
     if args.blame_gate is not None:
         # After artifacts + trace are written, so a failing run still
         # leaves the evidence on disk for CI to upload.

@@ -43,6 +43,20 @@ as labels (never baked into the name):
                                      stage
   ``sim.event.latency_ns``           histogram {instance}
   ``sim.instance.steady_interval_ns``  gauge {instance}
+  ``sim.fastpath.compile_s`` / ``sim.fastpath.replay_s``  gauge {} —
+                                     compiled-replay engine cost split
+                                     (:mod:`repro.sim.fastpath`): one-time
+                                     graph compile vs per-run replay
+  ``sim.fastpath.events_per_sec``    gauge {} — replay throughput; the
+                                     quantity ``benchmarks/sim_fastpath.py``
+                                     gates against the DES (>= 20x on the
+                                     sweep-engine scenarios)
+  ``sim.fastpath.replays``           counter {engine: sweep|heap}
+  ``sim.fastpath.fallbacks``         counter {reason} — auto-engine runs
+                                     routed back to the full DES (trace,
+                                     tracer, profile/blame, ...); a rising
+                                     rate means the hot path is silently
+                                     paying DES cost
   ``dse.candidates_evaluated``       counter {model}
   ``dse.pareto_survivors``           counter {model}
   ``dse.rescore_invocations``        counter {model}

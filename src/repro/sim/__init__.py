@@ -36,17 +36,49 @@ latency. Arrival and completion order per instance are preserved at any
 depth; a depth that at least covers ``ceil(latency / II) + 1`` keeps the
 bottleneck stage saturated.
 
+**Engine selection** (the ``engine=`` keyword on
+:func:`repro.sim.run.simulate_placement` /
+:func:`repro.sim.run.simulate_schedule` /
+:func:`repro.sim.run.sweep_latency_cycles`): Tier-S has two executions of
+the same semantics.
+
+  * ``engine="des"`` (default) — the full event loop over
+    :class:`~repro.sim.events.Task` objects. Keeps the task graph,
+    per-resource spans, blame annotations, and (optionally) a Chrome
+    trace; required by :func:`repro.sim.run.invariant_errors`,
+    :mod:`repro.obs.profile`, and anything that inspects
+    ``SimResult.graph``.
+  * ``engine="fast"`` — :mod:`repro.sim.fastpath` compiles the run once
+    into struct-of-arrays templates and replays completion times with a
+    static Lindley sweep (or an exact lean heap transcription when FIFO
+    grant order is dynamic). **Bit-exact** with the DES on every
+    completion/sojourn cycle — the parity suites compare with ``==`` —
+    at an order-of-magnitude lower cost (>= 20x events/sec on the
+    sweep-engine scenarios, gated by ``benchmarks/sim_fastpath.py``).
+    Returns a :class:`~repro.sim.fastpath.FastResult` (no task graph or
+    spans); raises :class:`~repro.sim.fastpath.FastpathUnsupported` when
+    the config needs the DES (e.g. ``trace=True``).
+  * ``engine="auto"`` — the fast path when supported, silent DES
+    fallback otherwise (counted in ``sim.fastpath.fallbacks``). This is
+    what the hot paths use: ``rescorer()`` / ``dse.search`` batch
+    rescoring, ``core.calibrate`` sweeps, and the
+    ``latency_under_load`` bench validation.
+
 Entry points: :func:`repro.sim.run.simulate_placement`,
 :func:`repro.sim.run.simulate_schedule`, :func:`repro.sim.run.rescorer`
 (the Tier-S hook for ``dse.search``), and :mod:`repro.launch.simulate`.
 """
 from .events import Resource, Simulator, Task, TaskGraph, DeadlockError
+from .fastpath import (CompiledRun, FastResult, FastpathUnsupported,
+                       Rescorer, compile_placement, compile_schedule, replay)
 from .run import (SimConfig, SimResult, rescorer, simulate_placement,
-                  simulate_schedule)
+                  simulate_schedule, sweep_latency_cycles)
 from .trace import ChromeTrace
 
 __all__ = [
-    "ChromeTrace", "DeadlockError", "Resource", "SimConfig", "SimResult",
-    "Simulator", "Task", "TaskGraph", "rescorer", "simulate_placement",
-    "simulate_schedule",
+    "ChromeTrace", "CompiledRun", "DeadlockError", "FastResult",
+    "FastpathUnsupported", "Rescorer", "Resource", "SimConfig", "SimResult",
+    "Simulator", "Task", "TaskGraph", "compile_placement",
+    "compile_schedule", "replay", "rescorer", "simulate_placement",
+    "simulate_schedule", "sweep_latency_cycles",
 ]

@@ -27,7 +27,6 @@ per-event critical path backwards without re-running the schedule.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 from collections import deque
 from typing import Callable, Deque, List, Optional, Sequence, Tuple
@@ -45,38 +44,42 @@ class DeadlockError(RuntimeError):
             f"{names}{more}")
 
 
-@dataclasses.dataclass(order=True)
-class _Event:
-    time: float
-    seq: int
-    fn: Callable[[], None] = dataclasses.field(compare=False)
-
-
 class Simulator:
-    """Time-ordered event loop over a float cycle clock."""
+    """Time-ordered event loop over a float cycle clock.
+
+    Heap entries are plain ``(time, seq, fn)`` tuples — ``seq`` is unique,
+    so the (uncomparable) callback is never reached by tuple comparison
+    and ties still break by schedule order.
+    """
 
     def __init__(self) -> None:
         self.now: float = 0.0
         self.events_run: int = 0
-        self._heap: List[_Event] = []
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
         self._seq: int = 0
 
     def schedule(self, delay: float, fn: Callable[[], None]) -> None:
         if delay < 0:
             raise ValueError(f"negative delay {delay}")
         self._seq += 1
-        heapq.heappush(self._heap, _Event(self.now + delay, self._seq, fn))
+        heapq.heappush(self._heap, (self.now + delay, self._seq, fn))
 
     def run(self, *, max_events: int = 5_000_000) -> int:
-        while self._heap:
-            ev = heapq.heappop(self._heap)
-            self.now = ev.time
-            ev.fn()
-            self.events_run += 1
-            if self.events_run > max_events:
-                raise RuntimeError(
-                    f"event budget exceeded ({max_events}) at t={self.now}")
-        return self.events_run
+        heap = self._heap
+        pop = heapq.heappop
+        n = self.events_run
+        try:
+            while heap:
+                t, _, fn = pop(heap)
+                self.now = t
+                fn()
+                n += 1
+                if n > max_events:
+                    raise RuntimeError(
+                        f"event budget exceeded ({max_events}) at t={self.now}")
+        finally:
+            self.events_run = n
+        return n
 
 
 class Resource:
@@ -143,7 +146,8 @@ class Task:
 
     __slots__ = ("graph", "name", "duration", "resource", "delay", "bytes",
                  "pid", "tid", "cat", "args", "start", "end", "requested_at",
-                 "cause", "granted_by", "_npreds", "_succs", "record")
+                 "cause", "granted_by", "_npreds", "_succs", "record",
+                 "_sim", "_emit")
 
     def __init__(self, graph: "TaskGraph", name: str, *, duration: float = 0.0,
                  resource: Optional[Resource] = None, delay: float = 0.0,
@@ -153,6 +157,11 @@ class Task:
         if duration < 0:
             raise ValueError(f"{name}: negative duration {duration}")
         self.graph = graph
+        self._sim = graph.sim
+        #: Whether _finish emits a trace span — resolved once per run by
+        #: :meth:`TaskGraph.run` so the inner loop skips the trace-handle
+        #: and duration checks per task.
+        self._emit = False
         self.name = name
         self.duration = duration
         self.resource = resource
@@ -190,30 +199,29 @@ class Task:
         self._npreds -= 1
         if self._npreds == 0:
             self.cause = pred
-            self.graph.sim.schedule(self.delay, self._request)
+            self._sim.schedule(self.delay, self._request)
 
     def _request(self) -> None:
-        self.requested_at = self.graph.sim.now
+        self.requested_at = self._sim.now
         if self.resource is not None:
             self.resource.request(self)
         else:
             self._begin()
 
     def _begin(self) -> None:
-        sim = self.graph.sim
+        sim = self._sim
         self.start = sim.now
         if self.resource is not None and self.requested_at is not None:
             self.resource.wait_cycles += sim.now - self.requested_at
         sim.schedule(self.duration, self._finish)
 
     def _finish(self) -> None:
-        sim = self.graph.sim
-        self.end = sim.now
+        self.end = self._sim.now
         if self.resource is not None:
             self.resource.spans.append((self.name, self.start, self.end,
                                         self.bytes))
             self.resource.release(self)
-        if self.record and self.graph.trace is not None and self.duration > 0:
+        if self._emit:
             self.graph.trace.span(self.pid, self.tid, self.name, self.start,
                                   self.end - self.start, cat=self.cat,
                                   args={**self.args, "bytes": self.bytes}
@@ -239,7 +247,9 @@ class TaskGraph:
         return [t for t in self.tasks if not t.done]
 
     def run(self, *, max_events: int = 5_000_000) -> Simulator:
+        tracing = self.trace is not None
         for t in self.tasks:
+            t._emit = tracing and t.record and t.duration > 0
             if t._npreds == 0:
                 self.sim.schedule(t.delay, t._request)
         self.sim.run(max_events=max_events)

@@ -40,6 +40,7 @@ arrival order and completion order are both preserved.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import random
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -85,18 +86,30 @@ class SimConfig:
                 and getattr(self.arrivals, "open_loop", False))
 
 
-@dataclasses.dataclass
-class InstanceSim:
-    """Per-instance bookkeeping: the tasks of every event, then measurements."""
+class InstanceStats:
+    """Measurement mixin shared by the DES (:class:`InstanceSim`) and the
+    fast path (:class:`repro.sim.fastpath.FastInstance`).
+
+    Every statistic derives from three per-event streams — admission
+    completion (``root_cycles``), event completion (``completion_cycles``)
+    and the optional intended ``arrivals`` — so both engines report
+    through literally the same formulas: bit-exact completion streams
+    imply bit-exact derived statistics. Derived lists are cached with
+    :func:`functools.cached_property` because results are immutable once
+    the run finishes (they used to be rebuilt on every property access).
+    """
 
     label: str
     tenant: str
     replica: int
-    placement: Placement
-    event_tasks: List[Dict[str, object]]
-    latencies: List[float] = dataclasses.field(default_factory=list)
-    arrivals: List[float] = dataclasses.field(default_factory=list)
-    """Intended (open-loop) arrival cycles per event; empty when closed."""
+    arrivals: List[float]
+    # Subclasses provide `root_cycles` / `completion_cycles` streams.
+
+    @functools.cached_property
+    def latencies(self) -> List[float]:
+        """Dataflow (arrive-to-done) latency of every event, in order."""
+        return [d - r for d, r in zip(self.completion_cycles,
+                                      self.root_cycles)]
 
     @property
     def mean_latency_cycles(self) -> float:
@@ -105,19 +118,12 @@ class InstanceSim:
     @property
     def span_cycles(self) -> float:
         """First arrival to last completion."""
-        first = self.event_tasks[0]["root"].end
-        last = self.event_tasks[-1]["done"].end
-        return last - first
+        return self.completion_cycles[-1] - self.root_cycles[0]
 
     @property
     def events_per_sec(self) -> float:
         return len(self.latencies) / (self.span_cycles * aie_arch.NS_PER_CYCLE
                                       * 1e-9)
-
-    @property
-    def completion_cycles(self) -> List[float]:
-        """Completion time of every event, in arrival order."""
-        return [rec["done"].end for rec in self.event_tasks]
 
     def steady_interval_cycles(self, *, warmup: Optional[int] = None,
                                drain: Optional[int] = None) -> float:
@@ -147,7 +153,7 @@ class InstanceSim:
         return 1e9 / aie_arch.ns(
             self.steady_interval_cycles(warmup=warmup, drain=drain))
 
-    @property
+    @functools.cached_property
     def sojourn_cycles(self) -> List[float]:
         """Intended-arrival-to-completion time per event.
 
@@ -157,8 +163,7 @@ class InstanceSim:
         """
         if not self.arrivals:
             return list(self.latencies)
-        return [rec["done"].end - a
-                for rec, a in zip(self.event_tasks, self.arrivals)]
+        return [c - a for c, a in zip(self.completion_cycles, self.arrivals)]
 
     def queue_wait_cycles(self, base: Optional[float] = None) -> List[float]:
         """Per-event queueing wait: sojourn minus the dataflow latency.
@@ -185,16 +190,35 @@ class InstanceSim:
 
 
 @dataclasses.dataclass
-class SimResult:
-    graph: TaskGraph
-    arr: ArrayResources
-    instances: List[InstanceSim]
-    config: SimConfig
-    trace: Optional[ChromeTrace]
+class InstanceSim(InstanceStats):
+    """Per-instance bookkeeping: the tasks of every event, then measurements."""
 
-    @property
-    def makespan_cycles(self) -> float:
-        return self.graph.makespan
+    label: str
+    tenant: str
+    replica: int
+    placement: Placement
+    event_tasks: List[Dict[str, object]]
+    arrivals: List[float] = dataclasses.field(default_factory=list)
+    """Intended (open-loop) arrival cycles per event; empty when closed."""
+
+    @functools.cached_property
+    def root_cycles(self) -> List[float]:
+        """Admission (arrive-task) completion of every event, in order."""
+        return [rec["root"].end for rec in self.event_tasks]
+
+    @functools.cached_property
+    def completion_cycles(self) -> List[float]:
+        """Completion time of every event, in arrival order."""
+        return [rec["done"].end for rec in self.event_tasks]
+
+
+class ResultStats:
+    """Aggregate measurement mixin shared by :class:`SimResult` (DES) and
+    :class:`repro.sim.fastpath.FastResult` — both expose ``instances``
+    built on :class:`InstanceStats`, so fleet-level statistics come out of
+    identical code on either engine."""
+
+    instances: List[InstanceStats]
 
     @property
     def latency_cycles(self) -> float:
@@ -209,6 +233,12 @@ class SimResult:
     def throughput_eps(self) -> float:
         return sum(i.events_per_sec for i in self.instances)
 
+    @functools.cached_property
+    def _completion_stream(self) -> List[float]:
+        """Merged sorted completion stream across instances (cached — the
+        sort used to be redone on every ``steady_throughput_eps`` call)."""
+        return sorted(t for i in self.instances for t in i.completion_cycles)
+
     def steady_throughput_eps(self, *, warmup: Optional[int] = None,
                               drain: Optional[int] = None) -> float:
         """Fleet steady-state events/sec (fill/drain transients discarded).
@@ -222,8 +252,7 @@ class SimResult:
         contended schedules it is the measured counterpart of
         ``ArraySchedule.contended_eps(pipelined=True)``.
         """
-        done = sorted(t for i in self.instances
-                      for t in i.completion_cycles)
+        done = self._completion_stream
         n = len(done)
         if n < 2:
             return self.throughput_eps()
@@ -252,7 +281,7 @@ class SimResult:
             sojourns.extend(s[int(len(s) * warmup_frac):])
         if not sojourns:
             return {"events": 0}
-        sojourns.sort()
+        sojourns = sorted(sojourns)
 
         def pct(q: float) -> float:
             return sojourns[min(len(sojourns) - 1,
@@ -262,6 +291,19 @@ class SimResult:
                 "p50_ns": aie_arch.ns(pct(0.50)),
                 "p99_ns": aie_arch.ns(pct(0.99)),
                 "max_ns": aie_arch.ns(sojourns[-1])}
+
+
+@dataclasses.dataclass
+class SimResult(ResultStats):
+    graph: TaskGraph
+    arr: ArrayResources
+    instances: List[InstanceSim]
+    config: SimConfig
+    trace: Optional[ChromeTrace]
+
+    @property
+    def makespan_cycles(self) -> float:
+        return self.graph.makespan
 
     def shim_wait_cycles(self) -> float:
         """Total cycles transfers spent queued behind other tenants."""
@@ -549,29 +591,68 @@ def _build_instance(g: TaskGraph, arr: ArrayResources, placement: Placement,
 def _finalize(g: TaskGraph, arr: ArrayResources, insts: List[InstanceSim],
               cfg: SimConfig, trace: Optional[ChromeTrace]) -> SimResult:
     g.run(max_events=cfg.max_events)
-    for inst in insts:
-        for e, rec in enumerate(inst.event_tasks):
-            lat = rec["done"].end - rec["root"].end
-            inst.latencies.append(lat)
-            if trace is not None:
-                trace.span("events", inst.label, f"e{e}", rec["root"].end,
-                           lat, args={"latency_ns": aie_arch.ns(lat)})
+    if trace is not None:
+        for inst in insts:
+            for e, (t0, lat) in enumerate(zip(inst.root_cycles,
+                                              inst.latencies)):
+                trace.span("events", inst.label, f"e{e}", t0, lat,
+                           args={"latency_ns": aie_arch.ns(lat)})
     return SimResult(graph=g, arr=arr, instances=insts, config=cfg,
                      trace=trace)
+
+
+def _maybe_fast(builder, cfg: SimConfig, tracer, engine: str):
+    """Engine dispatch shared by the two simulate entry points.
+
+    Returns a :class:`repro.sim.fastpath.FastResult` when the fast path
+    handles this run, or ``None`` meaning "run the DES". ``engine="fast"``
+    raises :class:`~repro.sim.fastpath.FastpathUnsupported` instead of
+    falling back; ``engine="auto"`` records the fallback reason in the
+    ``sim.fastpath.fallbacks`` counters and quietly yields to the DES.
+    """
+    if engine == "des":
+        return None
+    if engine not in ("fast", "auto"):
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(expected 'des', 'fast' or 'auto')")
+    from . import fastpath
+    reason = fastpath.supports(cfg, tracer=tracer)
+    if reason is not None:
+        if engine == "fast":
+            raise fastpath.FastpathUnsupported(reason)
+        fastpath.record_fallback(reason)
+        return None
+    return builder(fastpath)
 
 
 def simulate_placement(placement: Placement, *, tenant: str = "model",
                        p: OverheadParams = OVERHEADS,
                        config: Optional[SimConfig] = None,
-                       tracer: Optional[ChromeTrace] = None) -> SimResult:
+                       tracer: Optional[ChromeTrace] = None,
+                       engine: str = "des") -> SimResult:
     """Simulate one standalone instance end to end (Tier-S single tenant).
 
     ``tracer`` lets the caller supply an existing :class:`ChromeTrace`
     (e.g. one already carrying fleet serving spans) so simulator spans land
     in the same unified timeline; otherwise one is created per run when
     ``config.trace`` is set.
+
+    ``engine`` selects the execution engine: ``"des"`` (default) runs the
+    event-driven simulator; ``"fast"`` demands the compiled replay engine
+    (:mod:`repro.sim.fastpath` — bit-exact completion/sojourn cycles, but
+    no task graph, resource spans, or trace) and raises
+    :class:`~repro.sim.fastpath.FastpathUnsupported` when the requested
+    features need the DES; ``"auto"`` takes the fast path when eligible
+    and silently falls back otherwise. See the package docstring for the
+    exact fallback rules.
     """
     cfg = config or SimConfig()
+    fast = _maybe_fast(
+        lambda fp: fp.simulate_placement_fast(placement, tenant=tenant, p=p,
+                                              config=cfg),
+        cfg, tracer, engine)
+    if fast is not None:
+        return fast
     trace = tracer if tracer is not None else (
         ChromeTrace(meta={"mode": "single", "seed": cfg.seed,
                           "tenant": tenant}) if cfg.trace else None)
@@ -585,7 +666,8 @@ def simulate_placement(placement: Placement, *, tenant: str = "model",
 
 def simulate_schedule(schedule, *, p: OverheadParams = OVERHEADS,
                       config: Optional[SimConfig] = None,
-                      tracer: Optional[ChromeTrace] = None) -> SimResult:
+                      tracer: Optional[ChromeTrace] = None,
+                      engine: str = "des") -> SimResult:
     """Simulate a multi-tenant :class:`repro.core.tenancy.ArraySchedule`.
 
     All instances ingest concurrently through the *shared* shim columns
@@ -593,9 +675,15 @@ def simulate_schedule(schedule, *, p: OverheadParams = OVERHEADS,
     sharing a column serialize, which is the contention-aware replacement
     for the congestion-free ``R / latency`` throughput model.
     ``tracer`` injects an existing :class:`ChromeTrace` for a unified
-    timeline (see :func:`simulate_placement`).
+    timeline (see :func:`simulate_placement`); ``engine`` selects the
+    execution engine exactly as in :func:`simulate_placement`.
     """
     cfg = config or SimConfig()
+    fast = _maybe_fast(
+        lambda fp: fp.simulate_schedule_fast(schedule, p=p, config=cfg),
+        cfg, tracer, engine)
+    if fast is not None:
+        return fast
     trace = tracer if tracer is not None else (
         ChromeTrace(meta={"mode": "schedule", "seed": cfg.seed,
                           "instances": len(schedule.instances)})
@@ -620,7 +708,7 @@ def simulated_latency_cycles(placement: Placement, *,
 
 def sweep_latency_cycles(placements, *, p: OverheadParams = OVERHEADS,
                          config: Optional[SimConfig] = None,
-                         stages: bool = False):
+                         stages: bool = False, engine: str = "des"):
     """Tier-S sweep driver: simulate each placement and return the measured
     end-to-end cycles as a list (same order as ``placements``).
 
@@ -628,13 +716,29 @@ def sweep_latency_cycles(placements, *, p: OverheadParams = OVERHEADS,
     (:mod:`repro.core.calibrate`): the analytic model is least-squares-fit
     against exactly these numbers. ``stages=True`` additionally returns one
     :meth:`SimResult.stage_occupancy_cycles` dict per placement for the
-    per-stage drift localization path.
+    per-stage drift localization path. ``engine="fast"``/``"auto"`` runs
+    the sweep on the compiled replay engine — both the latencies and the
+    stage-occupancy dicts are bit-exact with the DES, so calibration fits
+    are unchanged while the sweep loses its DES construction cost.
     """
     cfg = config or SimConfig(events=1, trace=False)
+    use_fast = False
+    if engine != "des":
+        from . import fastpath
+        reason = fastpath.supports(cfg)
+        if reason is not None and engine == "fast":
+            raise fastpath.FastpathUnsupported(reason)
+        use_fast = reason is None
+        if not use_fast:
+            fastpath.record_fallback(reason)
     lats: List[float] = []
     stage_dicts: List[Dict[str, float]] = []
     for pl in placements:
-        res = simulate_placement(pl, p=p, config=cfg)
+        if use_fast:
+            res = fastpath.simulate_placement_fast(pl, p=p, config=cfg,
+                                                   stages=stages)
+        else:
+            res = simulate_placement(pl, p=p, config=cfg)
         lats.append(res.latency_cycles)
         if stages:
             stage_dicts.append(res.stage_occupancy_cycles())
@@ -642,15 +746,27 @@ def sweep_latency_cycles(placements, *, p: OverheadParams = OVERHEADS,
 
 
 def rescorer(*, p: OverheadParams = OVERHEADS,
-             config: Optional[SimConfig] = None
+             config: Optional[SimConfig] = None, fast: bool = True,
+             chunk: int = 32, workers: int = 0
              ) -> Callable[["object"], float]:
     """Tier-S re-scoring hook for :func:`repro.core.dse.search`.
 
     Returns a callable mapping a ``DSEResult`` to its simulated end-to-end
     latency in cycles; ``dse.search(model, rescore=sim.rescorer())`` then
     re-ranks its placement-validated top-K designs by simulated latency.
+
+    ``fast=True`` (default) returns a :class:`repro.sim.fastpath.Rescorer`
+    backed by the compiled replay engine — same cycles bit-exact, and it
+    additionally exposes ``score_batch`` so ``dse.search`` amortizes
+    dispatch over the whole top-K in ``chunk``-sized batches (``workers``
+    > 1 scores chunks in parallel processes). Configs that need a DES-only
+    feature (e.g. ``trace=True``) fall back per design automatically.
+    ``fast=False`` returns the plain DES closure.
     """
     cfg = config or SimConfig(events=1, trace=False)
+    if fast:
+        from .fastpath import Rescorer
+        return Rescorer(p=p, config=cfg, chunk=chunk, workers=workers)
 
     def _score(design) -> float:
         return simulate_placement(design.placement,
@@ -674,6 +790,10 @@ def invariant_errors(result: SimResult) -> List[str]:
     task of an event lies within the event's [arrive, done] envelope, and
     layer i+1 never starts before layer i finishes.
     """
+    if not isinstance(result, SimResult):
+        raise TypeError(
+            "invariant_errors needs a DES SimResult with recorded resource "
+            "spans; the fast path keeps none (run with engine='des')")
     errs: List[str] = []
     resources = {**result.arr.tile_resources(),
                  **result.arr.shim_resources()}

@@ -1,0 +1,275 @@
+"""Compiled fast-path replay: bit-exact parity with the DES on pinned
+scenarios, engine selection, fallback triggers, stage-occupancy parity,
+and the chunked batch rescorer."""
+import dataclasses
+
+import pytest
+
+from repro.core import dse, layerspec, perfmodel, tenancy
+from repro.core.layerspec import LayerSpec, ModelSpec
+from repro.core.mapping import Mapping, ModelMapping
+from repro.core.placement import place
+from repro.obs import MetricsRegistry
+from repro.serve import workload
+from repro.sim import fastpath, run as simrun
+from repro.obs.tracing import Tracer
+
+
+@pytest.fixture(scope="module")
+def ds32_design():
+    r = dse.explore(layerspec.deepsets_32())
+    assert r is not None
+    return r
+
+
+@pytest.fixture(scope="module")
+def packed_schedule(ds32_design):
+    sched = tenancy.pack_max_replicas(ds32_design, cap=4)
+    assert sched is not None and len(sched.instances) >= 2
+    return sched
+
+
+def table2_placement(m=16, k=16, n=16):
+    layer = LayerSpec(kind="mm", M=m, K=k, N=n, name=f"{m}x{k}x{n}")
+    spec = ModelSpec((layer,), name=f"t2-{m}x{k}x{n}")
+    return place(ModelMapping(model=spec, mappings=(Mapping(1, 1, 1, layer),)))
+
+
+def streams(res):
+    return [(i.label, i.root_cycles, i.completion_cycles, i.arrivals)
+            for i in res.instances]
+
+
+def assert_bit_exact(des, fast):
+    assert streams(fast) == streams(des)
+    assert fast.makespan_cycles == des.makespan_cycles
+    assert fast.events_run == des.graph.sim.events_run
+    assert fast.latency_cycles == des.latency_cycles
+    assert fast.sojourn_summary() == des.sojourn_summary()
+
+
+class TestParity:
+    def test_table2_shapes_exact(self):
+        for (m, k, n) in perfmodel.TABLE2_NS:
+            pl = place(ModelMapping(
+                model=ModelSpec((LayerSpec(kind="mm", M=m, K=k, N=n,
+                                           name="l"),), name="t2"),
+                mappings=(Mapping(1, 1, 1,
+                                  LayerSpec(kind="mm", M=m, K=k, N=n,
+                                            name="l")),)))
+            cfg = simrun.SimConfig(events=2, trace=False)
+            des = simrun.simulate_placement(pl, config=cfg)
+            fast = simrun.simulate_placement(pl, config=cfg, engine="fast")
+            assert fast.engine == "sweep"
+            assert_bit_exact(des, fast)
+
+    def test_ds32_serial_and_jittered(self, ds32_design):
+        pl = ds32_design.placement
+        for kw in (dict(events=3), dict(events=4, seed=11,
+                                        jitter_cycles=64.0)):
+            cfg = simrun.SimConfig(trace=False, **kw)
+            des = simrun.simulate_placement(pl, config=cfg)
+            fast = simrun.simulate_placement(pl, config=cfg, engine="fast")
+            assert fast.engine == "sweep"
+            assert_bit_exact(des, fast)
+
+    def test_ds32_pipelined_heap(self, ds32_design):
+        cfg = simrun.SimConfig(events=12, pipeline_depth=4, trace=False)
+        des = simrun.simulate_placement(ds32_design.placement, config=cfg)
+        fast = simrun.simulate_placement(ds32_design.placement, config=cfg,
+                                         engine="fast")
+        assert fast.engine == "heap"   # shim col serves ingest AND egress
+        assert_bit_exact(des, fast)
+
+    def test_open_loop_sweep(self, ds32_design):
+        spec = workload.ArrivalSpec(kind="poisson", rate_eps=2.0e6)
+        cfg = simrun.SimConfig(events=40, arrivals=spec, seed=5, trace=False)
+        des = simrun.simulate_placement(ds32_design.placement, config=cfg)
+        fast = simrun.simulate_placement(ds32_design.placement, config=cfg,
+                                         engine="fast")
+        assert fast.engine == "sweep"  # depth 1: serial admission
+        assert_bit_exact(des, fast)
+        assert fast.instances[0].arrivals == des.instances[0].arrivals
+
+    def test_packed_contended_heap(self, packed_schedule):
+        for kw in (dict(events=3), dict(events=8, pipeline_depth=4),
+                   dict(events=3, seed=7, jitter_cycles=64.0)):
+            cfg = simrun.SimConfig(trace=False, **kw)
+            des = simrun.simulate_schedule(packed_schedule, config=cfg)
+            fast = simrun.simulate_schedule(packed_schedule, config=cfg,
+                                            engine="fast")
+            assert fast.engine == "heap"
+            assert_bit_exact(des, fast)
+
+    def test_sweep_and_heap_agree_on_eligible(self, ds32_design):
+        cfg = simrun.SimConfig(events=3, trace=False)
+        cr = fastpath.compile_placement(ds32_design.placement, config=cfg)
+        assert cr.sweep_eligible
+        a = fastpath.replay(cr, engine="sweep")
+        b = fastpath.replay(cr, engine="heap")
+        assert streams(a) == streams(b)
+        assert a.makespan_cycles == b.makespan_cycles
+
+
+class TestEngineSelection:
+    def test_noplio_pipelined_is_sweep(self, ds32_design):
+        """Without the shim, no resource serves two template positions, so
+        even pipelined overlap keeps FIFO order static."""
+        cfg = simrun.SimConfig(events=10, pipeline_depth=4,
+                               include_plio=False, trace=False)
+        des = simrun.simulate_placement(ds32_design.placement, config=cfg)
+        fast = simrun.simulate_placement(ds32_design.placement, config=cfg,
+                                         engine="fast")
+        assert fast.engine == "sweep"
+        assert_bit_exact(des, fast)
+
+    def test_uncontended_schedule_is_sweep(self, ds32_design):
+        sched = tenancy.pack_max_replicas(ds32_design, cap=2)
+        cfg = simrun.SimConfig(events=3, shim_contention=False, trace=False)
+        fast = simrun.simulate_schedule(sched, config=cfg, engine="fast")
+        assert fast.engine == "sweep"
+
+    def test_forcing_sweep_on_contended_raises(self, packed_schedule):
+        cr = fastpath.compile_schedule(
+            packed_schedule, config=simrun.SimConfig(events=2, trace=False))
+        assert not cr.sweep_eligible
+        with pytest.raises(fastpath.FastpathUnsupported):
+            fastpath.replay(cr, engine="sweep")
+
+    def test_unknown_engines_raise(self, ds32_design):
+        cr = fastpath.compile_placement(
+            ds32_design.placement, config=simrun.SimConfig(trace=False))
+        with pytest.raises(ValueError):
+            fastpath.replay(cr, engine="vectorized")
+        with pytest.raises(ValueError):
+            simrun.simulate_placement(ds32_design.placement,
+                                      config=simrun.SimConfig(trace=False),
+                                      engine="warp")
+
+
+class TestFallback:
+    def test_trace_requires_des(self, ds32_design):
+        cfg = simrun.SimConfig(events=2, trace=True)
+        assert fastpath.supports(cfg) is not None
+        with pytest.raises(fastpath.FastpathUnsupported):
+            simrun.simulate_placement(ds32_design.placement, config=cfg,
+                                      engine="fast")
+
+    def test_auto_falls_back_to_des_on_trace(self, ds32_design):
+        before = dict(fastpath.COUNTERS["fallbacks"])
+        res = simrun.simulate_placement(
+            ds32_design.placement, config=simrun.SimConfig(events=2,
+                                                           trace=True),
+            engine="auto")
+        assert isinstance(res, simrun.SimResult)   # full DES, spans kept
+        assert res.trace is not None
+        after = fastpath.COUNTERS["fallbacks"]
+        assert sum(after.values()) == sum(before.values()) + 1
+
+    def test_external_tracer_requires_des(self):
+        cfg = simrun.SimConfig(events=1, trace=False)
+        assert fastpath.supports(cfg) is None
+        assert fastpath.supports(cfg, tracer=Tracer()) is not None
+
+    def test_auto_uses_fast_when_supported(self, ds32_design):
+        res = simrun.simulate_placement(
+            ds32_design.placement,
+            config=simrun.SimConfig(events=2, trace=False), engine="auto")
+        assert isinstance(res, fastpath.FastResult)
+
+    def test_invariants_need_des_result(self, ds32_design):
+        fast = simrun.simulate_placement(
+            ds32_design.placement,
+            config=simrun.SimConfig(events=1, trace=False), engine="fast")
+        with pytest.raises(TypeError):
+            simrun.invariant_errors(fast)
+
+
+class TestBudgetAndStall:
+    def test_event_budget_error_is_identical(self, ds32_design):
+        cfg = simrun.SimConfig(events=4, trace=False, max_events=100)
+        with pytest.raises(RuntimeError) as des_err:
+            simrun.simulate_placement(ds32_design.placement, config=cfg)
+        with pytest.raises(RuntimeError) as fast_err:
+            simrun.simulate_placement(ds32_design.placement, config=cfg,
+                                      engine="fast")
+        assert "event budget exceeded" in str(des_err.value)
+        assert str(des_err.value) == str(fast_err.value)
+
+    def test_heap_budget_error_matches_too(self, packed_schedule):
+        cfg = simrun.SimConfig(events=4, trace=False, max_events=500)
+        with pytest.raises(RuntimeError) as des_err:
+            simrun.simulate_schedule(packed_schedule, config=cfg)
+        with pytest.raises(RuntimeError) as fast_err:
+            simrun.simulate_schedule(packed_schedule, config=cfg,
+                                     engine="fast")
+        assert str(des_err.value) == str(fast_err.value)
+
+
+class TestStageOccupancy:
+    def test_stage_occupancy_bit_exact_both_engines(self, ds32_design):
+        cfg = simrun.SimConfig(events=2, trace=False)
+        des = simrun.simulate_placement(ds32_design.placement, config=cfg)
+        want = des.stage_occupancy_cycles()
+        fast = fastpath.simulate_placement_fast(ds32_design.placement,
+                                                config=cfg, stages=True)
+        got = fast.stage_occupancy_cycles()
+        assert got == want and list(got) == list(want)
+        cr = fastpath.compile_placement(ds32_design.placement, config=cfg)
+        heap = fastpath.replay(cr, engine="heap", stages=True)
+        got2 = heap.stage_occupancy_cycles()
+        assert got2 == want and list(got2) == list(want)
+
+    def test_stages_not_recorded_raises(self, ds32_design):
+        fast = fastpath.simulate_placement_fast(
+            ds32_design.placement,
+            config=simrun.SimConfig(events=1, trace=False))
+        with pytest.raises(fastpath.FastpathUnsupported):
+            fast.stage_occupancy_cycles()
+
+    def test_calibration_sweep_engine_parity(self, ds32_design):
+        pls = [ds32_design.placement, table2_placement()]
+        des = simrun.sweep_latency_cycles(pls, stages=True, engine="des")
+        fast = simrun.sweep_latency_cycles(pls, stages=True, engine="fast")
+        assert des == fast
+
+
+class TestRescorer:
+    def test_score_matches_des(self, ds32_design):
+        legacy = simrun.rescorer(fast=False)
+        fast = simrun.rescorer()
+        assert fast(ds32_design) == legacy(ds32_design)
+
+    def test_score_batch_matches_individual(self):
+        frontier = dse.search(layerspec.deepsets_32())[:6]
+        rs = simrun.rescorer(chunk=2)
+        batch = rs.score_batch(frontier)
+        assert batch == [rs(d) for d in frontier]
+
+    def test_score_batch_parallel_workers(self):
+        frontier = dse.search(layerspec.deepsets_32())[:4]
+        serial = simrun.rescorer(workers=0).score_batch(frontier)
+        parallel = simrun.rescorer(workers=2, chunk=2).score_batch(frontier)
+        assert parallel == serial
+
+    def test_dse_search_uses_batch_rescore(self):
+        fr = dse.search(layerspec.deepsets_32(), rescore=simrun.rescorer())
+        assert fr and all(d.sim_cycles is not None for d in fr)
+        legacy = dse.search(layerspec.deepsets_32(),
+                            rescore=simrun.rescorer(fast=False))
+        assert ([d.sim_cycles for d in fr]
+                == [d.sim_cycles for d in legacy])
+
+
+class TestMetricsExport:
+    def test_fast_result_exports_fastpath_family(self, ds32_design):
+        fast = simrun.simulate_placement(
+            ds32_design.placement,
+            config=simrun.SimConfig(events=2, trace=False), engine="fast")
+        reg = fast.export_metrics(MetricsRegistry())
+        names = {m.name for m in reg.all()}
+        assert "sim.fastpath.replay_s" in names
+        assert "sim.fastpath.compile_s" in names
+        assert "sim.fastpath.events_per_sec" in names
+        assert "sim.fastpath.replays" in names
+        assert "sim.event.latency_ns" in names    # shared sim.* family

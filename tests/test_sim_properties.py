@@ -2,13 +2,15 @@
 whatever valid placement the DSE produces, the event loop must terminate
 (no deadlock), conserve bytes, never undercut the analytic model, and —
 under pipelined admission — respect the initiation-interval invariants
-(II <= latency, order preservation, depth-1 == serial)."""
+(II <= latency, order preservation, depth-1 == serial). The compiled
+fast path (repro.sim.fastpath) must replay every such run bit-exactly."""
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dse, perfmodel, tenancy
 from repro.core.layerspec import LayerSpec, ModelSpec
-from repro.sim import run as simrun
+from repro.serve import workload
+from repro.sim import fastpath, run as simrun
 
 
 @st.composite
@@ -126,3 +128,77 @@ class TestPipeliningProperties:
         recs = b.instances[0].event_tasks
         for prev, nxt in zip(recs, recs[1:]):
             assert nxt["root"].end >= prev["done"].end
+
+
+def _streams(res):
+    return [(i.label, i.root_cycles, i.completion_cycles, i.arrivals)
+            for i in res.instances]
+
+
+def _assert_bit_exact(des, fast):
+    """No tolerance anywhere: the fast path IS the DES, minus the objects."""
+    assert _streams(fast) == _streams(des)
+    assert fast.makespan_cycles == des.makespan_cycles
+    assert fast.events_run == des.graph.sim.events_run
+    assert fast.latency_cycles == des.latency_cycles
+    assert fast.sojourn_summary() == des.sojourn_summary()
+
+
+class TestFastpathParityProperties:
+    """The compiled replay engines must be == the DES, example by example."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(model=mlp_chains(), events=st.integers(1, 4),
+           depth=st.integers(1, 4), seed=st.integers(0, 2 ** 16),
+           jitter=st.sampled_from([0.0, 32.0, 64.0]))
+    def test_single_instance_bit_exact(self, model, events, depth, seed,
+                                       jitter):
+        r = dse.explore(model)
+        if r is None:
+            return
+        cfg = simrun.SimConfig(events=events, pipeline_depth=depth,
+                               seed=seed, jitter_cycles=jitter, trace=False)
+        des = simrun.simulate_placement(r.placement, config=cfg)
+        fast = simrun.simulate_placement(r.placement, config=cfg,
+                                         engine="fast")
+        _assert_bit_exact(des, fast)
+        # and the two replay engines agree with each other wherever the
+        # sweep's static-FIFO-order argument applies
+        cr = fastpath.compile_placement(r.placement, config=cfg)
+        if cr.sweep_eligible:
+            _assert_bit_exact(des, fastpath.replay(cr, engine="heap"))
+
+    @settings(max_examples=8, deadline=None)
+    @given(model=mlp_chains(), seed=st.integers(0, 2 ** 16),
+           depth=st.integers(1, 3))
+    def test_packed_replicas_bit_exact(self, model, seed, depth):
+        r = dse.explore(model)
+        if r is None:
+            return
+        sched = tenancy.pack_max_replicas(r, cap=4)
+        if sched is None:
+            return
+        cfg = simrun.SimConfig(events=3, seed=seed, pipeline_depth=depth,
+                               jitter_cycles=64.0, trace=False)
+        des = simrun.simulate_schedule(sched, config=cfg)
+        fast = simrun.simulate_schedule(sched, config=cfg, engine="fast")
+        _assert_bit_exact(des, fast)
+
+    @settings(max_examples=8, deadline=None)
+    @given(model=mlp_chains(), seed=st.integers(0, 2 ** 16),
+           rate=st.sampled_from([5e5, 2e6, 8e6]),
+           kind=st.sampled_from(["poisson", "burst"]))
+    def test_open_loop_bit_exact(self, model, seed, rate, kind):
+        """Open-loop arrivals: the per-event offered delays are RNG draws,
+        so parity also proves the compile-time RNG sequencing matches the
+        DES build order exactly."""
+        r = dse.explore(model)
+        if r is None:
+            return
+        spec = workload.ArrivalSpec(kind=kind, rate_eps=rate)
+        cfg = simrun.SimConfig(events=12, pipeline_depth=12, arrivals=spec,
+                               seed=seed, trace=False)
+        des = simrun.simulate_placement(r.placement, config=cfg)
+        fast = simrun.simulate_placement(r.placement, config=cfg,
+                                         engine="fast")
+        _assert_bit_exact(des, fast)
